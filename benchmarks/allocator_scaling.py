@@ -1,0 +1,37 @@
+"""The paper's O(N) complexity claim: allocator wall time vs fleet size."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocator import adaptive_allocation
+
+
+def run(out_dir: str = "experiments/paper") -> list[str]:
+    timings = {}
+    for n in (4, 16, 64, 256, 1024, 4096):
+        key = jax.random.key(n)
+        lam = jax.random.uniform(key, (n,), minval=1.0, maxval=100.0)
+        mins = jnp.full((n,), 0.5 / n)
+        pri = jnp.ones((n,))
+        f = jax.jit(lambda l, m, p: adaptive_allocation(l, m, p))
+        f(lam, mins, pri).block_until_ready()
+        t0 = time.perf_counter()
+        reps = 200
+        for _ in range(reps):
+            f(lam, mins, pri).block_until_ready()
+        timings[n] = (time.perf_counter() - t0) / reps * 1e6
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "allocator_scaling.json"), "w") as fh:
+        json.dump(timings, fh, indent=1)
+    # sub-millisecond at paper scale; growth factor 4 -> 4096 agents
+    growth = timings[4096] / timings[4]
+    return [
+        f"scaling/alloc_n4,{timings[4]:.1f},sub_ms={timings[4] < 1000}",
+        f"scaling/alloc_n4096,{timings[4096]:.1f},growth_1024x_agents={growth:.1f}x",
+    ]

@@ -1,0 +1,65 @@
+"""§Roofline table assembly from the dry-run / unit-analysis artifacts.
+
+Reads experiments/roofline/*.json (scan-corrected, per-device) and
+experiments/dryrun/*.json (whole-step compile proof + memory_analysis) and
+emits the markdown table embedded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HW
+
+MOVE_DOWN = {
+    "compute": "shard/strengthen the matmul path (more model-parallel FLOP/s)",
+    "memory": "fuse or shrink activation traffic; bf16 intermediates; smaller capacity buffers",
+    "collective": "resharding: avoid weight gathers / reduce partial-sum all-reduces",
+}
+
+
+def load_rows(pattern: str = "experiments/roofline/*_pod1.json") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(pattern)):
+        base = os.path.basename(f)
+        # skip hillclimb variants in the baseline table
+        if any(t in base for t in ("_serve_v2", "_serve_v3", "_serve_ep", "_grouped", "_cap", "_noseq")):
+            continue
+        d = json.load(open(f))
+        if "roofline_s" in d:
+            rows.append(d)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck | "
+        "MODEL_FLOPS | useful ratio | what moves the bottleneck |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in rows:
+        r = d["roofline_s"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute']:.4f} | {r['memory']:.4f} "
+            f"| {r['collective']:.4f} | {d['bottleneck']} | {d['model_flops_global']:.2e} "
+            f"| {d['useful_flops_ratio']:.3f} | {MOVE_DOWN[d['bottleneck']]} |"
+        )
+    return "\n".join(out)
+
+
+def run(out_dir: str = "experiments/paper") -> list[str]:
+    rows = load_rows()
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "roofline_table.md"), "w") as fh:
+        fh.write(markdown_table(rows) + "\n")
+    if not rows:
+        return ["roofline/table,0,rows=0 (run repro.launch.roofline first)"]
+    worst = min(rows, key=lambda d: d["useful_flops_ratio"])
+    bn = {}
+    for d in rows:
+        bn[d["bottleneck"]] = bn.get(d["bottleneck"], 0) + 1
+    return [
+        f"roofline/table,0,rows={len(rows)};bottlenecks={bn}",
+        f"roofline/worst_useful,0,{worst['arch']}/{worst['shape']}={worst['useful_flops_ratio']:.3f}",
+    ]

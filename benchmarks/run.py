@@ -1,0 +1,46 @@
+"""Benchmark driver — one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV lines (us=0 where the benchmark is
+a metric table rather than a timing).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    allocator_scaling,
+    fig2_timeseries,
+    robustness,
+    roofline,
+    serving_engine,
+    table2_metrics,
+)
+
+MODULES = (
+    ("table2", table2_metrics),
+    ("fig2", fig2_timeseries),
+    ("robustness", robustness),
+    ("allocator_scaling", allocator_scaling),
+    ("roofline", roofline),
+    ("serving_engine", serving_engine),
+)
+
+
+def main() -> None:
+    failed = False
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        try:
+            for line in mod.run():
+                print(line)
+        except Exception:
+            failed = True
+            print(f"{name},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

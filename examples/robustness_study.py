@@ -1,0 +1,31 @@
+"""§V-B robustness study + beyond-paper policy comparison under four
+workload regimes (steady / 3x overload / spike / diurnal).
+
+  PYTHONPATH=src python examples/robustness_study.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAPER_ARRIVAL_RATES, paper_fleet, run_policy, workload
+
+fleet = paper_fleet()
+rates = jnp.asarray(PAPER_ARRIVAL_RATES)
+
+REGIMES = {
+    "steady": workload.constant(rates, 100),
+    "overload_3x": workload.scaled(rates, 100, 3.0),
+    "spike_10x": workload.spike(rates, 100, spike_agent=3, spike_start=50, spike_len=20),
+    "diurnal": workload.diurnal(rates, 100),
+    "poisson": workload.poisson(rates, 100, jax.random.key(0)),
+}
+POLICIES = ("static_equal", "round_robin", "adaptive", "water_filling", "predictive")
+
+print(f"{'regime':12s} " + " ".join(f"{p:>14s}" for p in POLICIES) + "   (avg latency s)")
+for regime, arr in REGIMES.items():
+    lats = [run_policy(p, arr, fleet).avg_latency for p in POLICIES]
+    print(f"{regime:12s} " + " ".join(f"{l:14.1f}" for l in lats))
+
+print("\nthroughput (rps):")
+for regime, arr in REGIMES.items():
+    tps = [run_policy(p, arr, fleet).total_throughput for p in POLICIES]
+    print(f"{regime:12s} " + " ".join(f"{t:14.2f}" for t in tps))

@@ -1,0 +1,45 @@
+"""End-to-end driver (the paper is a serving paper): the Table I fleet of
+four agents, each a REAL reduced-config model from the assigned pool,
+served with batched requests under the adaptive allocator — then the same
+traffic under round-robin for comparison.
+
+  PYTHONPATH=src python examples/serve_fleet.py [--ticks 16]
+"""
+import argparse
+import json
+
+import numpy as np
+
+from repro.launch.serve import DEFAULT_FLEET, build_engine
+
+
+def drive(policy: str, ticks: int, seed: int = 0):
+    eng = build_engine(policy, budget_tokens=48, max_len=48)
+    rng = np.random.default_rng(seed)
+    for t in range(ticks):
+        for (name, _, _, _, _, rate) in DEFAULT_FLEET:
+            for _ in range(rng.poisson(rate)):
+                eng.submit(name, rng.integers(0, 1000, 6), max_new_tokens=3)
+        eng.step()
+    return eng.metrics()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=16)
+    args = ap.parse_args()
+    results = {}
+    for policy in ("adaptive", "round_robin"):
+        m = drive(policy, args.ticks)
+        results[policy] = m
+        print(f"\n== {policy} ==")
+        print(json.dumps(m, indent=1))
+    a, r = results["adaptive"], results["round_robin"]
+    if np.isfinite(a["avg_latency_ticks"]) and np.isfinite(r["avg_latency_ticks"]):
+        red = 1 - (a["avg_latency_ticks"] + 1) / (r["avg_latency_ticks"] + 1)
+        print(f"\nadaptive vs round-robin latency reduction: {100*red:.0f}% "
+              f"(paper's simulator-level figure: 85%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Flat-npz checkpointing for arbitrary pytrees (params + optimizer state).
+
+Keys are tree paths; bfloat16 leaves are stored as uint16 views with a
+dtype sidecar so numpy round-trips exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save(path: str, tree) -> None:
+    flat = _flatten(tree)
+    arrays = {}
+    dtypes = {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        dtypes[k] = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        arrays[k] = arr
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, __dtypes__=json.dumps(dtypes), **arrays)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (a pytree of arrays/SDS)."""
+    with np.load(path, allow_pickle=False) as z:
+        dtypes = json.loads(str(z["__dtypes__"]))
+        flat_like = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for pathk, leaf in flat_like[0]:
+            k = jax.tree_util.keystr(pathk)
+            arr = z[k]
+            if dtypes[k] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"{k}: checkpoint {arr.shape} vs model {leaf.shape}")
+            leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves)

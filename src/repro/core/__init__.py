@@ -1,0 +1,36 @@
+"""Paper core: adaptive GPU allocation + fleet simulation (pure JAX)."""
+from repro.core.agents import (
+    AgentSpec,
+    Fleet,
+    PAPER_ARRIVAL_RATES,
+    T4_PRICE_PER_HOUR,
+    paper_fleet,
+)
+from repro.core.allocator import (
+    POLICY_NAMES,
+    adaptive_allocation,
+    predictive_adaptive,
+    round_robin,
+    static_equal,
+    throughput_greedy,
+    water_filling,
+)
+from repro.core import workload
+from repro.core.objective import ObjectiveWeights, step_objective
+from repro.core.simulator import (
+    POLICY_IDS,
+    SimConfig,
+    SimSummary,
+    SimTrace,
+    run_policy,
+    simulate,
+    summarize,
+)
+
+__all__ = [
+    "AgentSpec", "Fleet", "PAPER_ARRIVAL_RATES", "T4_PRICE_PER_HOUR",
+    "paper_fleet", "POLICY_NAMES", "adaptive_allocation", "predictive_adaptive",
+    "round_robin", "static_equal", "throughput_greedy", "water_filling",
+    "ObjectiveWeights", "step_objective", "POLICY_IDS", "SimConfig",
+    "SimSummary", "SimTrace", "run_policy", "simulate", "summarize", "workload",
+]

@@ -1,0 +1,78 @@
+"""Agent fleet specifications (paper §III-A, Table I).
+
+An agent is characterized by (M_i, T_i, R_i, P_i): model size (MB), base
+throughput at full GPU (requests/s), minimum GPU fraction, and priority
+(1 = high, 2 = medium, 3 = low).  The fleet is stored struct-of-arrays so the
+allocator and simulator are fully vectorized jnp (O(N), jittable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentSpec:
+    """One agent's static profile (paper Table I row)."""
+
+    name: str
+    model_size_mb: float   # M_i
+    base_throughput: float  # T_i, requests/s at g=1.0
+    min_gpu: float          # R_i, fraction of total capacity
+    priority: int           # P_i: 1=high, 2=medium, 3=low
+
+
+@dataclasses.dataclass(frozen=True)
+class Fleet:
+    """Struct-of-arrays view of N agents, ready for vectorized allocation."""
+
+    names: tuple[str, ...]
+    model_size_mb: jnp.ndarray   # (N,)
+    base_throughput: jnp.ndarray  # (N,)
+    min_gpu: jnp.ndarray          # (N,)
+    priority: jnp.ndarray         # (N,) float for jnp division
+
+    @property
+    def num_agents(self) -> int:
+        return len(self.names)
+
+    @staticmethod
+    def from_specs(specs: Sequence[AgentSpec]) -> "Fleet":
+        return Fleet(
+            names=tuple(s.name for s in specs),
+            model_size_mb=jnp.asarray([s.model_size_mb for s in specs], jnp.float32),
+            base_throughput=jnp.asarray([s.base_throughput for s in specs], jnp.float32),
+            min_gpu=jnp.asarray([s.min_gpu for s in specs], jnp.float32),
+            priority=jnp.asarray([s.priority for s in specs], jnp.float32),
+        )
+
+    def validate(self) -> None:
+        """Static sanity constraints (checked eagerly, outside jit)."""
+        mins = np.asarray(self.min_gpu)
+        pris = np.asarray(self.priority)
+        if (mins < 0).any() or (mins > 1).any():
+            raise ValueError(f"min_gpu out of [0,1]: {mins}")
+        if (pris < 1).any():
+            raise ValueError(f"priority must be >= 1: {pris}")
+        if (np.asarray(self.base_throughput) <= 0).any():
+            raise ValueError("base_throughput must be positive")
+
+
+def paper_fleet() -> Fleet:
+    """The paper's 4-agent system, exactly Table I."""
+    return Fleet.from_specs([
+        AgentSpec("coordinator", 500.0, 100.0, 0.10, 1),
+        AgentSpec("specialist_nlp", 2000.0, 50.0, 0.30, 2),
+        AgentSpec("specialist_vision", 1500.0, 60.0, 0.25, 2),
+        AgentSpec("specialist_reasoning", 3000.0, 30.0, 0.35, 1),
+    ])
+
+
+# Paper §IV-A arrival rates (requests/second).
+PAPER_ARRIVAL_RATES = (80.0, 40.0, 45.0, 25.0)
+
+# Paper platform model: NVIDIA T4, $0.72/hour.
+T4_PRICE_PER_HOUR = 0.72

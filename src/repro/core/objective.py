@@ -1,0 +1,39 @@
+"""Paper Eq. (2): min over allocations of  alpha·L + beta·C − gamma·H.
+
+Used by tests (the adaptive policy should score no worse than round-robin)
+and by the beyond-paper greedy objective-descent experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveWeights:
+    alpha: float = 1.0   # latency weight
+    beta: float = 1.0    # cost weight
+    gamma: float = 1.0   # throughput weight (negated: reward)
+
+
+def step_objective(
+    g: jnp.ndarray,
+    queue: jnp.ndarray,
+    lam: jnp.ndarray,
+    base_throughput: jnp.ndarray,
+    weights: ObjectiveWeights = ObjectiveWeights(),
+    price_per_second: float = 0.0002,
+    latency_cap: float = 1000.0,
+) -> jnp.ndarray:
+    """One-step value of Eq. (2) for allocation g at state (queue, lam)."""
+    capacity = g * base_throughput
+    served = jnp.minimum(capacity, queue + lam)
+    new_queue = queue + lam - served
+    latency = jnp.minimum(new_queue / jnp.maximum(capacity, _EPS), latency_cap)
+    l_term = latency.mean()
+    c_term = price_per_second  # provisioned device: constant across g
+    h_term = served.sum()
+    return weights.alpha * l_term + weights.beta * c_term - weights.gamma * h_term

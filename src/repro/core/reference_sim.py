@@ -1,0 +1,71 @@
+"""Independent pure-numpy oracle of the fleet simulator.
+
+A second, deliberately naive implementation of the queue dynamics (python
+loops, float64) used by property tests to cross-validate the vectorized
+``lax.scan`` simulator — the same oracle pattern the Pallas kernels use
+(ref.py vs kernel).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.agents import Fleet
+
+_EPS = 1e-9
+
+
+def simulate_numpy(
+    policy: str,
+    arrivals: np.ndarray,
+    fleet: Fleet,
+    g_total: float = 1.0,
+    latency_cap: float = 1000.0,
+    ema_alpha: float = 0.3,
+) -> dict:
+    """Returns per-step arrays matching SimTrace semantics."""
+    T = np.asarray(fleet.base_throughput, np.float64)
+    R = np.asarray(fleet.min_gpu, np.float64)
+    P = np.asarray(fleet.priority, np.float64)
+    n = len(T)
+    steps = arrivals.shape[0]
+    q = np.zeros(n)
+    ema = np.asarray(arrivals[0], np.float64).copy()
+    out = {"allocation": [], "served": [], "queue": [], "latency": []}
+
+    for t in range(steps):
+        lam = np.asarray(arrivals[t], np.float64)
+        ema = ema_alpha * lam + (1 - ema_alpha) * ema
+        if policy == "static_equal":
+            g = np.full(n, g_total / n)
+        elif policy == "round_robin":
+            g = np.zeros(n)
+            g[t % n] = g_total
+        elif policy in ("adaptive", "predictive"):
+            src = lam if policy == "adaptive" else ema
+            d = src * R / P
+            if d.sum() <= 0:
+                g = np.zeros(n)
+            else:
+                g = np.maximum(R, d / d.sum() * g_total)
+                if g.sum() > g_total:
+                    g = g * (g_total / g.sum())
+        elif policy == "water_filling":
+            pressure = (q + lam) / np.maximum(T, _EPS)
+            if pressure.sum() <= 0:
+                g = np.zeros(n)
+            else:
+                prop = pressure / pressure.sum() * g_total
+                g = np.maximum(np.where(pressure > 0, R, 0.0), prop)
+                if g.sum() > g_total:
+                    g = g * (g_total / g.sum())
+        else:
+            raise ValueError(policy)
+        cap = g * T
+        served = np.minimum(cap, q + lam)
+        q = q + lam - served
+        lat = np.minimum(q / np.maximum(cap, _EPS), latency_cap)
+        out["allocation"].append(g.copy())
+        out["served"].append(served.copy())
+        out["queue"].append(q.copy())
+        out["latency"].append(lat.copy())
+    return {k: np.asarray(v) for k, v in out.items()}

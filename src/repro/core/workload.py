@@ -1,0 +1,65 @@
+"""Workload (arrival-process) generators for the fleet simulator.
+
+The paper simulates 100 one-second steps with fixed per-agent arrival rates
+(80/40/45/25 rps) and a fixed random seed.  Constant arrivals reproduce
+Table II exactly; Poisson, spike, diurnal and domination processes support
+the robustness study (§V-B) and beyond-paper experiments.
+
+Every generator returns an (S, N) float32 array of arrivals per step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def constant(rates: jnp.ndarray, num_steps: int) -> jnp.ndarray:
+    """lam_i(t) = rates_i for all t (reproduces the paper's Table II)."""
+    rates = jnp.asarray(rates, jnp.float32)
+    return jnp.broadcast_to(rates, (num_steps, rates.shape[0]))
+
+
+def poisson(rates: jnp.ndarray, num_steps: int, key: jax.Array) -> jnp.ndarray:
+    """Poisson(lam_i) arrivals per step, fixed seed for reproducibility."""
+    rates = jnp.asarray(rates, jnp.float32)
+    draws = jax.random.poisson(key, rates, shape=(num_steps, rates.shape[0]))
+    return draws.astype(jnp.float32)
+
+
+def spike(
+    rates: jnp.ndarray,
+    num_steps: int,
+    spike_agent: int,
+    spike_start: int,
+    spike_len: int,
+    magnitude: float = 10.0,
+) -> jnp.ndarray:
+    """10x arrival-rate spike on one agent (§V-B adaptation-speed test)."""
+    base = constant(rates, num_steps)
+    t = jnp.arange(num_steps)[:, None]
+    in_spike = (t >= spike_start) & (t < spike_start + spike_len)
+    col = jnp.arange(base.shape[1])[None, :] == spike_agent
+    return jnp.where(in_spike & col, base * magnitude, base)
+
+
+def scaled(rates: jnp.ndarray, num_steps: int, factor: float) -> jnp.ndarray:
+    """Uniformly scaled demand, e.g. 3x overload (§V-B normalization test)."""
+    return constant(jnp.asarray(rates, jnp.float32) * factor, num_steps)
+
+
+def dominated(rates: jnp.ndarray, num_steps: int, agent: int, share: float = 0.9) -> jnp.ndarray:
+    """One agent carries `share` of total requests (§V-B monopolization test)."""
+    rates = jnp.asarray(rates, jnp.float32)
+    total = rates.sum()
+    n = rates.shape[0]
+    others = jnp.full((n,), total * (1.0 - share) / (n - 1), jnp.float32)
+    new_rates = others.at[agent].set(total * share)
+    return constant(new_rates, num_steps)
+
+
+def diurnal(rates: jnp.ndarray, num_steps: int, period: int = 50, depth: float = 0.5) -> jnp.ndarray:
+    """Sinusoidal load swing — beyond-paper, exercises the predictive policy."""
+    rates = jnp.asarray(rates, jnp.float32)
+    t = jnp.arange(num_steps, dtype=jnp.float32)[:, None]
+    mod = 1.0 + depth * jnp.sin(2.0 * jnp.pi * t / period)
+    return rates[None, :] * mod

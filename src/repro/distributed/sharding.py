@@ -1,0 +1,188 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Model code declares *logical* axes on every parameter / cache dimension
+(see repro.models.params).  This module maps them onto the production mesh:
+
+Training rules (2D: FSDP over "data", tensor over "model"; "pod" is pure
+data parallelism):
+    batch    -> (pod, data)      activations
+    embed    -> data             d_model rows of weights   (FSDP / ZeRO-3)
+    ffn/heads/kv/vocab -> model  weight output dims        (tensor parallel)
+    experts  -> None             (per-expert dims already sharded)
+    layers   -> None             (scan axis)
+
+Serving rules differ on the caches: the KV-cache sequence dim shards over
+"model" (sequence-sharded decode attention — GSPMD turns the softmax and
+PV contraction into all-reduces), keeping a 405B 32k cache within HBM.
+
+Any dimension not divisible by its mapped axis size is replicated instead
+(recorded by ``explain_specs`` so the dry-run log shows every fallback).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamDecl, is_decl, tree_map_decls
+
+TRAIN_RULES: dict[str, tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),
+    "cache_batch": ("pod", "data"),
+    "embed": ("data",),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": None,
+    "layers": None,
+    "kv_seq": None,
+}
+
+SERVE_RULES: dict[str, tuple[str, ...] | None] = {
+    **TRAIN_RULES,
+    "kv_seq": ("model",),   # sequence-sharded KV cache
+    "kv_heads": None,       # kv heads (1-16) rarely divide the model axis
+}
+
+# Beyond-baseline serving rules (§Perf hillclimb): decode activations are
+# REPLICATED over the data axis instead of batch-sharded.  With 2D-sharded
+# weights (embed->data, ffn/heads->model) GSPMD then partial-sums the
+# data-axis contraction and all-reduces small (B, out) activations instead
+# of all-gathering ~GBs of weights every token.  Caches stay batch-sharded
+# on data ("cache_batch"), seq-sharded on model.
+SERVE_V2_RULES: dict[str, tuple[str, ...] | None] = {
+    **SERVE_RULES,
+    "batch": None,
+}
+
+# Expert-parallel variants (§Perf): expert dim shards over "model"; the
+# per-expert FFN dim falls back to replicated (axis reuse), so expert
+# weights live E/16 per device and dispatch/combine become all-to-alls.
+SERVE_EP_RULES = {**SERVE_RULES, "experts": ("model",)}
+SERVE_V2_EP_RULES = {**SERVE_V2_RULES, "experts": ("model",)}
+TRAIN_EP_RULES = {**TRAIN_RULES, "experts": ("model",)}
+
+# Mixtral-class caches are window-sized (4k) — small enough to skip
+# sequence sharding and its distributed-softmax all-reduces.
+SERVE_V2_NOSEQ_RULES = {**SERVE_V2_RULES, "kv_seq": None}
+
+# v3 (§Perf iter 3): the new token's k/v must be broadcast into the
+# model-(seq-)sharded cache anyway, so sharding the kv projection's output
+# dim on "model" makes GSPMD all-gather w_k/w_v (67 MB/layer/token for
+# 405B) on every decode step.  Replicate that dim (rows stay data-sharded:
+# +2.1 MB/layer/device for 405B) and the gather disappears.
+SERVE_V3_RULES = {**SERVE_V2_RULES, "kv": None}
+
+# Sequence-parallel activations (§Perf pair 4): when num_heads does not
+# divide the model axis (minitron 24H, qwen2-vl 12H on a 16-way axis),
+# head-sharded attention degenerates into partially-replicated tilings
+# whose repair is an all-reduce of the full (S,S) logits.  Sharding the
+# activation SEQUENCE dim over "model" instead sidesteps head sharding:
+# attention gathers K/V once (B·S·kv·hd, ~134 MB for minitron-32k) and all
+# S² work stays local.  Applied to dim 1 of model inputs by
+# ``batch_shardings`` via the "seq" rule.
+SERVE_SP_RULES = {**SERVE_RULES, "seq": ("model",)}
+TRAIN_SP_RULES = {**TRAIN_RULES, "seq": ("model",)}
+
+RULE_SETS = {
+    "train": TRAIN_RULES,
+    "train_ep": TRAIN_EP_RULES,
+    "serve": SERVE_RULES,
+    "serve_ep": SERVE_EP_RULES,
+    "serve_v2": SERVE_V2_RULES,
+    "serve_v2_ep": SERVE_V2_EP_RULES,
+    "serve_v2_noseq": SERVE_V2_NOSEQ_RULES,
+    "serve_v3": SERVE_V3_RULES,
+    "serve_sp": SERVE_SP_RULES,
+    "train_sp": TRAIN_SP_RULES,
+}
+
+
+def _mesh_axes(mesh: Mesh, wanted: tuple[str, ...] | None) -> tuple[str, ...]:
+    if wanted is None:
+        return ()
+    return tuple(a for a in wanted if a in mesh.shape)
+
+
+def spec_for_axes(
+    mesh: Mesh,
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    rules: dict[str, tuple[str, ...] | None],
+) -> P:
+    """PartitionSpec for one array; replicates non-divisible dims."""
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, logical in zip(shape, axes):
+        if logical is None or logical not in rules:
+            entries.append(None)
+            continue
+        mapped = tuple(a for a in _mesh_axes(mesh, rules[logical]) if a not in used)
+        total = math.prod(mesh.shape[a] for a in mapped) if mapped else 1
+        if not mapped or dim % total != 0:
+            entries.append(None)
+            continue
+        used.update(mapped)
+        entries.append(mapped if len(mapped) > 1 else mapped[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shardings_for_decls(mesh: Mesh, decl_tree, rules=TRAIN_RULES):
+    """NamedSharding tree matching a ParamDecl tree."""
+    return tree_map_decls(
+        lambda d: NamedSharding(mesh, spec_for_axes(mesh, d.shape, d.axes, rules)),
+        decl_tree,
+    )
+
+
+def batch_shardings(mesh: Mesh, specs: dict, rules=TRAIN_RULES):
+    """Shardings for an input_specs dict: dim0 = batch; dim1 = sequence iff
+    the rule set enables sequence parallelism ("seq"); rest replicated.
+
+    positions3 / frontend_embeds / tokens all carry (batch, seq, ...) first.
+    """
+    out = {}
+    for k, sds in specs.items():
+        entries: list = []
+        bdims = _mesh_axes(mesh, rules["batch"])
+        total = math.prod(mesh.shape[a] for a in bdims) if bdims else 1
+        if bdims and sds.shape and sds.shape[0] % total == 0:
+            entries.append(bdims if len(bdims) > 1 else bdims[0])
+        else:
+            entries.append(None)
+        sdims = _mesh_axes(mesh, rules.get("seq"))
+        stotal = math.prod(mesh.shape[a] for a in sdims) if sdims else 1
+        if sdims and len(sds.shape) >= 2 and sds.shape[1] % stotal == 0:
+            entries.append(sdims if len(sdims) > 1 else sdims[0])
+        while entries and entries[-1] is None:
+            entries.pop()
+        out[k] = NamedSharding(mesh, P(*entries))
+    return out
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def explain_specs(mesh: Mesh, decl_tree, rules=TRAIN_RULES) -> list[str]:
+    """Human-readable fallback report for the dry-run log."""
+    lines: list[str] = []
+
+    def visit(path, d: ParamDecl):
+        spec = spec_for_axes(mesh, d.shape, d.axes, rules)
+        wanted = [a for a in d.axes if a and rules.get(a)]
+        got = [e for e in spec if e is not None]
+        if wanted and not got:
+            lines.append(f"{path}: {d.shape} axes={d.axes} -> replicated (non-divisible)")
+        return d
+
+    flat = jax.tree_util.tree_flatten_with_path(decl_tree, is_leaf=is_decl)[0]
+    for path, d in flat:
+        visit(jax.tree_util.keystr(path), d)
+    return lines

@@ -1,0 +1,27 @@
+"""Backend dispatch for the Mamba-2 SSD scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd import ref
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x, dt, A, Bm, Cm, D, h0=None, *, chunk=64, impl=None):
+    """Chunked SSD scan; returns (y, final_state)."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.ssd_chunked(x, dt, A, Bm, Cm, D, h0=h0, chunk=chunk)
+    from repro.kernels.ssd import ssd_scan
+
+    interpret = jax.default_backend() != "tpu"
+    return ssd_scan.ssd(x, dt, A, Bm, Cm, D, h0=h0, chunk=chunk, interpret=interpret)
+
+
+ssd_decode_step = jax.jit(ref.ssd_decode_step)

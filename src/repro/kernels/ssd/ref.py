@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space duality) scan.
+
+Per head h with state size N and head dim P, the recurrence over time is
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * (B_t outer x_t)      (P, N)
+    y_t = h_t @ C_t + D * x_t
+
+Shapes (single B/C group, as in Mamba-2 defaults):
+    x:  (B, S, H, P)    dt: (B, S, H)    A, D: (H,)
+    Bm, Cm: (B, S, N)
+
+``ssd_naive`` is the sequential-scan oracle; ``ssd_chunked`` is the
+quadratic-within-chunk / linear-across-chunks SSD algorithm (arXiv:2405.21060
+§6) — the same decomposition the Pallas kernel tiles into VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_naive(x, dt, A, Bm, Cm, D, h0=None):
+    """Sequential recurrence; returns (y, h_final)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h_init = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp                    # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(Af[None] * dtt)          # (B,H)
+        upd = dtt[..., None, None] * xt[..., None] * bt[:, None, None, :]
+        hnew = decay[..., None, None] * hprev + upd
+        yt = jnp.einsum("bhpn,bn->bhp", hnew, ct)
+        return hnew, yt
+
+    inputs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h_init, inputs)
+    y = jnp.moveaxis(ys, 0, 1) + D[None, None, :, None].astype(jnp.float32) * xf
+    return y.astype(x.dtype), h_final
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., t, s] = sum_{r=s+1..t} a[..., r] (t >= s)."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, h0=None, chunk: int = 64):
+    """Chunked SSD; exact (up to fp assoc.) match of ``ssd_naive``."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if s % chunk:
+        # Pad with dt=0 steps: decay exp(A*0)=1 and zero input contribution,
+        # so the final state is unchanged; padded outputs are sliced off.
+        pad = chunk - s % chunk
+        y, hf = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0))),
+            D, h0=h0, chunk=chunk,
+        )
+        return y[:, :s], hf
+    c = s // chunk
+    xf = x.astype(jnp.float32).reshape(b, c, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, c, chunk, h)
+    Bf = Bm.astype(jnp.float32).reshape(b, c, chunk, n)
+    Cf = Cm.astype(jnp.float32).reshape(b, c, chunk, n)
+    Af = A.astype(jnp.float32)
+
+    a = Af[None, None, None, :] * dtf                     # (B,C,Q,H)
+    a_h = jnp.moveaxis(a, -1, 2)                          # (B,C,H,Q)
+    a_cum = jnp.cumsum(a_h, axis=-1)                      # within-chunk cumsum
+    a_tot = a_cum[..., -1]                                # (B,C,H)
+
+    # Intra-chunk (quadratic within the chunk):
+    L = jnp.exp(_segsum(a_h))                             # (B,C,H,Q,Q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cf, Bf)        # (B,C,Q,Q)
+    gated = scores[:, :, None] * L                        # (B,C,H,Q,Q)
+    y_intra = jnp.einsum("bchqs,bcsh,bcshp->bcqhp", gated, dtf, xf)
+
+    # Chunk states: contribution of each chunk to the running state.
+    decay_tail = jnp.exp(a_tot[..., None] - a_cum)        # (B,C,H,Q)
+    states = jnp.einsum("bchq,bcqh,bcqhp,bcqn->bchpn", decay_tail, dtf, xf, Bf)
+
+    # Inter-chunk recurrence over c (linear):
+    h_init = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def chunk_step(hprev, inp):
+        st, atot = inp                                    # (B,H,P,N), (B,H)
+        hnew = jnp.exp(atot)[..., None, None] * hprev + st
+        return hnew, hprev
+
+    h_final, h_prevs = jax.lax.scan(
+        chunk_step,
+        h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(a_tot, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,C,H,P,N) state entering chunk
+
+    # Inter-chunk output: decayed previous state read out by C.
+    decay_in = jnp.exp(a_cum)                             # (B,C,H,Q)
+    y_inter = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cf, h_prevs, decay_in)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + D[None, None, :, None].astype(jnp.float32) * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, D, h):
+    """One-token update: x (B,H,P), dt (B,H), Bm/Cm (B,N), h (B,H,P,N)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(A[None].astype(jnp.float32) * dtf)
+    upd = dtf[..., None, None] * xf[..., None] * Bm[:, None, None, :].astype(jnp.float32)
+    hnew = decay[..., None, None] * h + upd
+    y = jnp.einsum("bhpn,bn->bhp", hnew, Cm.astype(jnp.float32))
+    y = y + D[None, :, None].astype(jnp.float32) * xf
+    return y.astype(x.dtype), hnew

@@ -1,0 +1,144 @@
+"""Mamba-2 SSD chunked scan for TPU (Pallas).
+
+TPU-native adaptation of the SSD algorithm (arXiv:2405.21060 §6): the
+sequence is processed in chunks along the innermost grid dimension; the
+(P, N) recurrent state lives in VMEM scratch and persists across chunk
+steps, so HBM traffic is exactly one read of (x, dt, B, C) and one write
+of y — the quadratic intra-chunk work runs on the MXU as (Q,Q) and (Q,N)
+matmuls.
+
+Grid: (batch, heads, num_chunks).  Validated against ``ref.ssd_chunked``
+and ``ref.ssd_naive`` in interpret mode by tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
+    h_ref,
+    *, q,
+):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    bm = b_ref[0].astype(jnp.float32)                  # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)                  # (Q, N)
+    a_h = a_ref[0]                                     # scalar A for this head
+    d_h = d_ref[0]
+
+    a = a_h * dt                                       # (Q,)
+    a_cum = jnp.cumsum(a)                              # within-chunk
+    a_tot = a_cum[-1]
+
+    # Intra-chunk: y_t += sum_{s<=t} exp(a_cum_t - a_cum_s) dt_s (C_t.B_s) x_s
+    seg = a_cum[:, None] - a_cum[None, :]              # (Q, Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (q, q), 1
+    )
+    gate = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (Q, Q)
+    w = scores * gate * dt[None, :]
+    y = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (Q, P)
+
+    # Inter-chunk: read out the carried state.
+    h = h_ref[...]                                     # (P, N)
+    decay_in = jnp.exp(a_cum)[:, None]                 # (Q, 1)
+    y += jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * decay_in
+
+    # State update: h <- exp(a_tot) h + sum_s exp(a_tot - a_cum_s) dt_s x_s B_s^T
+    wstate = (jnp.exp(a_tot - a_cum) * dt)[:, None]    # (Q, 1)
+    upd = jax.lax.dot_general(
+        x * wstate, bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (P, N)
+    h_ref[...] = jnp.exp(a_tot) * h + upd
+
+    y_ref[0, :, 0, :] = (y + d_h * x).astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        hout_ref[0, 0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, D, h0=None, *, chunk=64, interpret=False):
+    """x (B,S,H,P), dt (B,S,H), A/D (H,), Bm/Cm (B,S,N) -> (y, h_final).
+
+    h0 is folded in by the wrapper (kernel state starts at zero): a nonzero
+    initial state contributes C_t exp(a_cum_t) h0 per step, which equals
+    running the kernel with one virtual dt=0 prefix chunk; for simplicity we
+    add the h0 read-out outside the kernel (exact, used by decode restarts).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if s % chunk:
+        pad = chunk - s % chunk
+        y, hf = ssd(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0))),
+            D, h0=h0, chunk=chunk, interpret=interpret,
+        )
+        return y[:, :s], hf
+
+    nc = s // chunk
+    y, hout = pl.pallas_call(
+        functools.partial(_kernel, q=chunk),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, c_: (b_, c_, h_)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(
+        x,
+        dt.astype(jnp.float32),
+        A.astype(jnp.float32),
+        Bm, Cm,
+        D.astype(jnp.float32),
+    )
+    if h0 is not None:
+        # Exact h0 correction: y_t += C_t (prod_{r<=t} a_r) h0 per head.
+        af = A.astype(jnp.float32)
+        a_all = af[None, None, :] * dt.astype(jnp.float32)       # (B,S,H)
+        cum = jnp.cumsum(a_all, axis=1)
+        contrib = jnp.einsum(
+            "bsn,bhpn->bshp", Cm.astype(jnp.float32), h0.astype(jnp.float32)
+        ) * jnp.exp(cum)[..., None]
+        y = (y.astype(jnp.float32) + contrib).astype(x.dtype)
+        hf = hout + h0.astype(jnp.float32) * jnp.exp(cum[:, -1])[..., None, None]
+        return y, hf
+    return y, hout

@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, with NO array allocation (ShapeDtypeStruct inputs).
+
+For each pair we lower the step the shape dictates (train_step / prefill /
+decode_step), compile under SPMD, and record:
+  * memory_analysis()  — proves the per-device working set fits HBM,
+  * cost_analysis()    — per-device HLO FLOPs / bytes for §Roofline,
+  * collective bytes   — parsed from the post-SPMD HLO text by op kind.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+      --shape decode_32k --multi-pod --rules serve_v2
+"""
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models.model import (
+    INPUT_SHAPES,
+    build_model,
+    decode_token_specs,
+    input_specs,
+    shape_applicable,
+)
+from repro.models.params import abstract_params
+from repro.training.optimizer import OptimizerConfig, abstract_opt_state
+from repro.training.train_step import build_train_step
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all `dtype[dims]` shapes in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes moved through each collective kind (output sizes)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w-]+)\(", line)
+        if not m:
+            continue
+        typestr, opname = m.groups()
+        base = opname.rstrip(".0123456789")
+        # normalize e.g. all-gather-start / all-reduce-done
+        for kind in _COLLECTIVES:
+            if base == kind or base.startswith(kind + "-"):
+                if base.endswith("-done"):
+                    break  # counted at -start
+                out[kind] += _shape_bytes(typestr)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def _lowerable(arch: str, shape_name: str, mesh, rules_name: str = "serve",
+               moe_impl: str = None):
+    """Build (fn, args, in_shardings) for one (arch, shape) pair."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if moe_impl:
+        cfg = _dc.replace(cfg, moe_impl=moe_impl)
+    shape = INPUT_SHAPES[shape_name]
+    api = build_model(cfg)
+    rules = shd.RULE_SETS[rules_name]
+
+    params_sds = api.abstract()
+    params_sh = shd.shardings_for_decls(mesh, api.param_decls, rules)
+
+    if shape.mode == "train":
+        opt_cfg = OptimizerConfig()
+        step_fn = build_train_step(api, opt_cfg)
+        opt_sds = abstract_opt_state(params_sds)
+        opt_sh = {
+            "m": params_sh,
+            "v": params_sh,
+            "step": shd.replicated(mesh),
+        }
+        batch_sds = input_specs(cfg, shape)
+        batch_sh = shd.batch_shardings(mesh, batch_sds, rules)
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_sds, opt_sds, batch_sds)
+
+    if shape.mode == "prefill":
+        batch_sds = input_specs(cfg, shape)
+        batch_sh = shd.batch_shardings(mesh, batch_sds, rules)
+        fn = jax.jit(
+            lambda p, b: api.prefill(p, b, shape.seq_len),
+            in_shardings=(params_sh, batch_sh),
+        )
+        return fn, (params_sds, batch_sds)
+
+    # decode: one new token against a seq_len cache
+    cache_decl = api.cache_decls(shape.global_batch, shape.seq_len)
+    cache_sds = abstract_params(cache_decl)
+    cache_sh = shd.shardings_for_decls(mesh, cache_decl, rules)
+    token_sds, pos_sds = decode_token_specs(shape)
+    tok_sh = shd.batch_shardings(mesh, {"t": token_sds}, rules)["t"]
+    fn = jax.jit(
+        lambda p, c, t, pos: api.decode_step(p, c, t, pos, shape.seq_len),
+        in_shardings=(params_sh, cache_sh, tok_sh, shd.replicated(mesh)),
+        donate_argnums=(1,),
+    )
+    return fn, (params_sds, cache_sds, token_sds, pos_sds)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, rules: str = None,
+            moe_impl: str = None) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or ("train" if shape.mode == "train" else "serve")
+    t0 = time.time()
+    fn, args = _lowerable(arch, shape_name, mesh, rules, moe_impl)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    n_chips = mesh.size
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(mesh.shape),
+        "mode": shape.mode,
+        "rules": rules,
+        "chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device": {
+            "flops": flops,
+            "bytes_accessed": bytes_acc,
+            "collective_bytes": coll,
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline_s": {
+            "compute": flops / HW["peak_flops_bf16"],
+            "memory": bytes_acc / HW["hbm_bw"],
+            "collective": coll["total"] / HW["ici_bw"],
+        },
+        "model_params": cfg.param_count,
+        "active_params": cfg.active_param_count,
+    }
+    terms = res["roofline_s"]
+    res["bottleneck"] = max(terms, key=terms.get)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--moe-impl", default=None, choices=[None, "einsum", "grouped"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if args.shape == "all" else (args.shape,)
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}_{shape}_{'pod2' if args.multi_pod else 'pod1'}"
+            if args.rules:
+                tag += f"_{args.rules}"
+            if args.moe_impl:
+                tag += f"_{args.moe_impl}"
+            try:
+                res = run_one(arch, shape, multi_pod=args.multi_pod, rules=args.rules,
+                              moe_impl=args.moe_impl)
+            except Exception as e:  # a failure here is a bug in our sharding
+                res = {"arch": arch, "shape": shape, "error": repr(e)[:2000]}
+                print(f"FAIL {tag}: {repr(e)[:300]}")
+            path = os.path.join(args.out, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            if "error" not in res and "skipped" not in res:
+                r = res["roofline_s"]
+                print(
+                    f"OK {tag}: compile={res['compile_s']}s "
+                    f"compute={r['compute']:.4f}s memory={r['memory']:.4f}s "
+                    f"coll={r['collective']:.4f}s bottleneck={res['bottleneck']}"
+                )
+            elif "skipped" in res:
+                print(f"SKIP {tag}: {res['skipped']}")
+
+
+if __name__ == "__main__":
+    main()

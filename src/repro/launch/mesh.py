@@ -1,0 +1,35 @@
+"""Production mesh factories.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets --xla_force_host_platform_device_count=512 before
+any jax import and then calls these.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1D 'data' mesh (CPU smoke tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=_auto(1))
+
+
+# TPU v5e-class hardware model used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,   # per chip
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link
+    "hbm_bytes": 16 * 2**30,
+}

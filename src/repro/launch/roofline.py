@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Scan-aware roofline accounting (§Roofline).
+
+``compiled.cost_analysis()`` counts a ``while`` (lax.scan) body ONCE, so a
+whole-step analysis of a 126-layer scanned model under-reports FLOPs/bytes
+by ~L.  This script therefore compiles per-component *units* under the same
+mesh/shardings and scales them by their trip counts:
+
+  train:    grad(checkpoint(superblock)) x n_super  +  head(+grad)  +  adamw
+  prefill:  superblock x n_super  +  head
+  decode:   superblock_decode x n_super  +  head(S=1)
+
+Each unit's HLO is parsed for collective bytes the same way as the full
+step.  Known residual undercount: the SSD inter-chunk recurrence (a tiny
+lax.scan inside the block) is still counted once per block — its FLOPs are
+O(S*P*N/Q) vs the block's O(S*Q*(P+N)), <2% for our chunk sizes.
+
+Writes experiments/roofline/<arch>_<shape>_<mesh>.json; table assembly and
+MODEL_FLOPS ratios live in benchmarks/roofline.py.
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import sharding as shd
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import encdec, transformer
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.model import INPUT_SHAPES, build_model, shape_applicable
+from repro.models.params import abstract_params
+from repro.training.optimizer import OptimizerConfig, abstract_opt_state, adamw_update
+
+
+def _cost(compiled) -> dict:
+    c = compiled.cost_analysis()
+    return {
+        "flops": float(c.get("flops", 0.0)),
+        "bytes": float(c.get("bytes accessed", 0.0)),
+        "coll": collective_bytes(compiled.as_text())["total"],
+    }
+
+
+def _scaled(unit: dict, k: float) -> dict:
+    return {kk: v * k for kk, v in unit.items()}
+
+
+def _add(*units) -> dict:
+    out = {"flops": 0.0, "bytes": 0.0, "coll": 0.0}
+    for u in units:
+        for k in out:
+            out[k] += u[k]
+    return out
+
+
+def _compile(fn, args, shardings, mesh):
+    with mesh:
+        return jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+
+
+def _batch_sh(mesh, sds, rules):
+    return shd.batch_shardings(mesh, {"x": sds}, rules)["x"]
+
+
+# ---------------------------------------------------------------------------
+# Units for decoder-only models
+# ---------------------------------------------------------------------------
+
+def _dec_units(cfg: ModelConfig, mode: str, b: int, s: int, mesh, rules) -> dict:
+    """Returns dict of unit costs + multipliers for a decoder-only model."""
+    api = build_model(cfg)
+    n_super, rem = transformer.super_counts(cfg)
+    pat = transformer.block_pattern(cfg)
+    sb_decls = transformer._superblock_decls(cfg)
+    sb_sds = abstract_params(sb_decls)
+    sb_sh = shd.shardings_for_decls(mesh, sb_decls, rules)
+    x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    x_sh = _batch_sh(mesh, x_sds, rules)
+
+    def sb_fwd(x, sp):
+        base = jnp.arange(x.shape[1], dtype=jnp.int32)
+        if cfg.mrope:
+            pos = jnp.broadcast_to(base[None, :, None], (*x.shape[:2], 3))
+        else:
+            pos = jnp.broadcast_to(base[None], x.shape[:2])
+        y, aux, _ = transformer._superblock_fwd(x, sp, cfg, pos, False)
+        return y, aux
+
+    units = {}
+    if mode == "train":
+        def loss_fn(x, sp):
+            y, aux = jax.checkpoint(sb_fwd)(x, sp)
+            return y.astype(jnp.float32).sum() + aux
+
+        grad_fn = jax.grad(loss_fn, argnums=(0, 1))
+        units["block"] = (
+            _cost(_compile(grad_fn, (x_sds, sb_sds), (x_sh, sb_sh), mesh)),
+            n_super + rem / max(len(pat), 1),
+        )
+    elif mode in ("prefill", "decode_block_ctx"):
+        units["block"] = (
+            _cost(_compile(sb_fwd, (x_sds, sb_sds), (x_sh, sb_sh), mesh)),
+            n_super + rem / max(len(pat), 1),
+        )
+
+    return units
+
+
+def _head_unit(cfg: ModelConfig, mode: str, b: int, s: int, mesh, rules):
+    decls = {
+        "embed": L.embed_decls(cfg.padded_vocab, cfg.d_model, cfg.tie_embeddings),
+        "final_norm": L.rmsnorm_decls(cfg.d_model),
+    }
+    sds = abstract_params(decls)
+    sh = shd.shardings_for_decls(mesh, decls, rules)
+    tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_sh = _batch_sh(mesh, tok_sds, rules)
+
+    def head(p, tokens, labels):
+        x = L.embed(tokens, p["embed"])
+        x = L.rms_norm(x, p["final_norm"], cfg.norm_eps)
+        logits = L.unembed(x, p["embed"])
+        return L.cross_entropy_loss(logits, labels, cfg.padded_vocab)
+
+    if mode == "train":
+        fn = jax.grad(head, argnums=0)
+    else:
+        fn = lambda p, tokens, labels: head(p, tokens, labels)
+    compiled = _compile(fn, (sds, tok_sds, tok_sds), (sh, tok_sh, tok_sh), mesh)
+    return _cost(compiled)
+
+
+def _opt_unit(cfg: ModelConfig, api, mesh, rules):
+    p_sds = api.abstract()
+    p_sh = shd.shardings_for_decls(mesh, api.param_decls, rules)
+    o_sds = abstract_opt_state(p_sds)
+    o_sh = {"m": p_sh, "v": p_sh, "step": shd.replicated(mesh)}
+    ocfg = OptimizerConfig()
+
+    def opt(grads, state, params):
+        return adamw_update(grads, state, params, ocfg)
+
+    compiled = _compile(opt, (p_sds, o_sds, p_sds), (p_sh, o_sh, p_sh), mesh)
+    return _cost(compiled)
+
+
+def _decode_units(cfg: ModelConfig, b: int, seq_len: int, mesh, rules):
+    api = build_model(cfg)
+    n_super, rem = transformer.super_counts(cfg)
+    pat = transformer.block_pattern(cfg)
+    spec = transformer.cache_spec(cfg, seq_len)
+    sb_decls = transformer._superblock_decls(cfg)
+    sb_sds = abstract_params(sb_decls)
+    sb_sh = shd.shardings_for_decls(mesh, sb_decls, rules)
+    cache_decls = {
+        f"b{i}_{k}": transformer._block_cache_decls(k, cfg, b, spec)
+        for i, k in enumerate(pat)
+    }
+    c_sds = abstract_params(cache_decls)
+    c_sh = shd.shardings_for_decls(mesh, cache_decls, rules)
+    x_sds = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+    x_sh = _batch_sh(mesh, x_sds, rules)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def sb_dec(x, sp, caches, pos):
+        new = {}
+        for name in sp:
+            kind = name.split("_", 1)[1]
+            x, nc = transformer._block_decode(kind, x, caches[name], sp[name], cfg, pos, spec)
+            new[name] = nc
+        return x, new
+
+    compiled = _compile(
+        sb_dec, (x_sds, sb_sds, c_sds, pos_sds),
+        (x_sh, sb_sh, c_sh, shd.replicated(mesh)), mesh,
+    )
+    return {"block": (_cost(compiled), n_super + rem / max(len(pat), 1))}
+
+
+# ---------------------------------------------------------------------------
+# Units for encoder-decoder
+# ---------------------------------------------------------------------------
+
+def _encdec_units(cfg: ModelConfig, mode: str, b: int, s: int, mesh, rules, enc_len: int):
+    enc_decls = encdec._enc_block_decls(cfg)
+    dec_decls = encdec._dec_block_decls(cfg)
+    units = {}
+    for tag, decls, ss in (("enc_block", enc_decls, enc_len if mode != "train" else s),
+                           ("dec_block", dec_decls, s)):
+        sds = abstract_params(decls)
+        sh = shd.shardings_for_decls(mesh, decls, rules)
+        x_sds = jax.ShapeDtypeStruct((b, ss, cfg.d_model), jnp.bfloat16)
+        x_sh = _batch_sh(mesh, x_sds, rules)
+
+        if tag == "enc_block":
+            def fwd(x, p):
+                from repro.models import attention as attn
+                pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+                h, _ = attn.self_attention(L.rms_norm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, pos, causal=False)
+                x = x + h
+                return x + L.ffn(L.rms_norm(x, p["ln2"], cfg.norm_eps), p["mlp"], cfg.ffn_type)
+            args, shs, mult = (x_sds, sds), (x_sh, sh), cfg.encoder_layers
+        else:
+            enc_sds = jax.ShapeDtypeStruct((b, enc_len if mode != "train" else s, cfg.d_model), jnp.bfloat16)
+            enc_sh = _batch_sh(mesh, enc_sds, rules)
+
+            def fwd(x, enc_out, p):
+                from repro.models import attention as attn
+                pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+                h, _ = attn.self_attention(L.rms_norm(x, p["ln1"], cfg.norm_eps), p["self_attn"], cfg, pos, causal=True)
+                x = x + h
+                ckv = attn.cross_kv(enc_out, p["cross_attn"], cfg)
+                x = x + attn.cross_attention(L.rms_norm(x, p["ln_x"], cfg.norm_eps), ckv, p["cross_attn"], cfg)
+                return x + L.ffn(L.rms_norm(x, p["ln2"], cfg.norm_eps), p["mlp"], cfg.ffn_type)
+            args, shs, mult = (x_sds, enc_sds, sds), (x_sh, enc_sh, sh), cfg.num_layers
+
+        if mode == "train":
+            f = fwd
+            def loss_fn(*a, _f=f):
+                return jax.checkpoint(_f)(*a).astype(jnp.float32).sum()
+            fn = jax.grad(loss_fn, argnums=tuple(range(len(args))))
+        else:
+            fn = fwd
+        units[tag] = (_cost(_compile(fn, args, shs, mesh)), mult)
+    return units
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, rules_name: str = None,
+            moe_impl: str = None, moe_cap: float = None) -> dict:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if moe_impl:
+        cfg = _dc.replace(cfg, moe_impl=moe_impl)
+    if moe_cap:
+        cfg = _dc.replace(cfg, moe_capacity_factor=moe_cap)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules_name = rules_name or ("train" if shape.mode == "train" else "serve")
+    rules = shd.RULE_SETS[rules_name]
+    api = build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    t0 = time.time()
+
+    if cfg.arch_type == "encdec":
+        units = _encdec_units(cfg, shape.mode, b, 1 if shape.mode == "decode" else s,
+                              mesh, rules, enc_len=4096)
+    elif shape.mode == "decode":
+        units = _decode_units(cfg, b, s, mesh, rules)
+    else:
+        units = _dec_units(cfg, shape.mode, b, s, mesh, rules)
+
+    head_s = 1 if shape.mode == "decode" else s
+    head = _head_unit(cfg, shape.mode, b, head_s, mesh, rules)
+    total = _add(head, *[_scaled(u, k) for u, k in units.values()])
+    parts = {name: {"unit": u, "mult": k} for name, (u, k) in units.items()}
+    parts["head"] = {"unit": head, "mult": 1}
+    if shape.mode == "train":
+        opt = _opt_unit(cfg, api, mesh, rules)
+        total = _add(total, opt)
+        parts["opt"] = {"unit": opt, "mult": 1}
+
+    # MODEL_FLOPS (global): 6 N D for train, 2 N D otherwise; D = tokens.
+    tokens = b * (1 if shape.mode == "decode" else s)
+    n_active = cfg.active_param_count
+    model_flops = (6 if shape.mode == "train" else 2) * n_active * tokens
+    chips = mesh.size
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "chips": chips, "rules": rules_name,
+        "per_device": total,
+        "parts": parts,
+        "roofline_s": {
+            "compute": total["flops"] / HW["peak_flops_bf16"],
+            "memory": total["bytes"] / HW["hbm_bw"],
+            "collective": total["coll"] / HW["ici_bw"],
+        },
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": model_flops / max(total["flops"] * chips, 1.0),
+        "wall_s": round(time.time() - t0, 1),
+    }
+    terms = res["roofline_s"]
+    res["bottleneck"] = max(terms, key=terms.get)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--moe-cap", type=float, default=None)
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if args.shape == "all" else (args.shape,)
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}_{shape}_{'pod2' if args.multi_pod else 'pod1'}"
+            if args.rules:
+                tag += f"_{args.rules}"
+            if args.moe_impl:
+                tag += f"_{args.moe_impl}"
+            if args.moe_cap:
+                tag += f"_cap{args.moe_cap}"
+            try:
+                res = run_one(arch, shape, multi_pod=args.multi_pod,
+                              rules_name=args.rules, moe_impl=args.moe_impl,
+                              moe_cap=args.moe_cap)
+            except Exception as e:
+                res = {"arch": arch, "shape": shape, "error": repr(e)[:2000]}
+                print(f"FAIL {tag}: {repr(e)[:300]}")
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=1)
+            if "roofline_s" in res:
+                r = res["roofline_s"]
+                print(f"OK {tag}: compute={r['compute']:.4f} memory={r['memory']:.4f} "
+                      f"coll={r['collective']:.4f} bn={res['bottleneck']} "
+                      f"useful={res['useful_flops_ratio']:.3f}")
+            elif "skipped" in res:
+                print(f"SKIP {tag}")
+
+
+if __name__ == "__main__":
+    main()

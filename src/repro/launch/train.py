@@ -1,0 +1,68 @@
+"""Training launcher.
+
+CPU/laptop: reduced configs train for real (--reduced).  Production: the
+same script lowers the full config onto the pod mesh (see dryrun.py for
+the no-hardware path).
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --reduced \
+      --steps 100 --batch 8 --seq 128 --ckpt /tmp/ck.npz
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models.model import build_model
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_step import build_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    api = build_model(cfg)
+    params = api.init(jax.random.key(args.seed))
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                              total_steps=args.steps)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(build_train_step(api, opt_cfg))
+    data = SyntheticTokens(DataConfig(cfg.vocab_size, args.seq, args.batch, args.seed))
+
+    t0 = time.time()
+    for i in range(args.steps):
+        raw = data.batch(i)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        if cfg.frontend == "vision":
+            fe = min(cfg.frontend_tokens, args.seq)
+            batch["frontend_embeds"] = jnp.zeros((args.batch, fe, cfg.d_model), jnp.bfloat16)
+        if cfg.arch_type == "encdec":
+            batch["frontend_embeds"] = jnp.zeros((args.batch, args.seq, cfg.d_model), jnp.bfloat16)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} lr={float(m['lr']):.2e} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        ckpt.save(args.ckpt, {"params": params, "opt": opt_state})
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block + local attention (RecurrentGemma / Griffin,
+arXiv:2402.19427).
+
+Temporal-mixing block comes in two flavours selected by the config's
+``block_pattern`` (1:2 attention:recurrent for RecurrentGemma):
+
+* recurrent: x -> [gelu gate branch | conv -> RG-LRU branch] -> merge -> proj
+  RG-LRU:  r_t = σ(W_r x_t);  i_t = σ(W_i x_t)
+           a_t = exp(-c · softplus(Λ) · r_t)          (c = 8)
+           h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+  Train/prefill uses ``jax.lax.associative_scan`` (log-depth on TPU);
+  decode is the O(1) recurrence.
+* attn: GQA/MQA local (sliding-window) attention, window = 2048.
+
+State per recurrent layer: (conv window, h) — O(1) in sequence length,
+qualifying the hybrid for ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import decl
+
+_RGLRU_C = 8.0
+
+
+def rglru_decls(cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "w_gate_branch": decl((d, w), ("embed", "ffn")),
+        "w_x_branch": decl((d, w), ("embed", "ffn")),
+        "conv_w": decl((cfg.ssm_conv_width, w), (None, "ffn"), scale=0.5),
+        "conv_b": decl((w,), ("ffn",), init="zeros"),
+        "w_input_gate": decl((w, w), ("ffn", None)),
+        "b_input_gate": decl((w,), ("ffn",), init="zeros"),
+        "w_rec_gate": decl((w, w), ("ffn", None)),
+        "b_rec_gate": decl((w,), ("ffn",), init="zeros"),
+        "lambda_param": decl((w,), ("ffn",), init="ones"),
+        "w_out": decl((w, d), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    s = x.shape[1]
+    for k in range(width):
+        out = out + pad[:, k : k + s].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rglru_gates(xb, p):
+    """Returns (a, b) of the linear recurrence h_t = a_t h + b_t, fp32."""
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_rec_gate"].astype(jnp.float32) + p["b_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_input_gate"].astype(jnp.float32) + p["b_input_gate"].astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lambda_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_scan(xb: jnp.ndarray, p, h0: jnp.ndarray | None = None):
+    """xb (B,S,W) -> (h_seq (B,S,W), h_final (B,W)) via associative scan."""
+    a, b = _rglru_gates(xb, p)
+    if h0 is not None:
+        # Fold the carried state into the first step's additive term.
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h_seq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h_seq.astype(xb.dtype), h_seq[:, -1]  # final state stays fp32
+
+
+def recurrent_block(x: jnp.ndarray, p, cfg: ModelConfig, h0=None):
+    """Griffin recurrent temporal block; x (B,S,D) -> (out, (conv_tail, h))."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    xb = x @ p["w_x_branch"]
+    conv = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    h_seq, h_fin = rglru_scan(conv, p, h0)
+    out = (h_seq * gate) @ p["w_out"]
+    width = cfg.ssm_conv_width
+    conv_tail = xb[:, -(width - 1):]  # last W-1 pre-conv inputs for decode
+    return out, (conv_tail, h_fin)
+
+
+def rglru_cache_decls(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": decl((batch, cfg.ssm_conv_width - 1, w), ("cache_batch", None, "kv_heads"), init="zeros"),
+        "h": decl((batch, w), ("cache_batch", "kv_heads"), init="zeros", dtype="float32"),
+    }
+
+
+def recurrent_decode_step(x: jnp.ndarray, cache, p, cfg: ModelConfig):
+    """x (B,1,D) -> (out (B,1,D), new_cache); O(1) per token."""
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate_branch"])
+    xb = x[:, 0] @ p["w_x_branch"]
+    window = jnp.concatenate([cache["conv"], xb[:, None]], axis=1)
+    wconv = p["conv_w"].astype(jnp.float32)
+    conv = (window.astype(jnp.float32) * wconv[None]).sum(1) + p["conv_b"].astype(jnp.float32)
+    conv = conv.astype(x.dtype)
+    a, b = _rglru_gates(conv[:, None], p)
+    h = a[:, 0] * cache["h"].astype(jnp.float32) + b[:, 0]
+    out = ((h.astype(x.dtype) * gate) @ p["w_out"])[:, None]
+    return out, {"conv": window[:, 1:], "h": h.astype(jnp.float32)}

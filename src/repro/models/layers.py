@@ -1,0 +1,147 @@
+"""Shared model building blocks: norms, RoPE / M-RoPE, FFNs, embeddings.
+
+All functions are pure; parameters come in as dict subtrees declared by the
+matching ``*_decls`` helpers so shapes, logical sharding axes and init live
+in one place (see ``repro.models.params``).
+
+Logical axes used here (mapped to mesh axes in repro.distributed.sharding):
+  "embed"   — d_model rows of weight matrices  -> fsdp/data axis
+  "ffn"     — FFN hidden dim                   -> model axis
+  "heads"   — flattened q-head * head_dim      -> model axis
+  "kv"      — flattened kv-head * head_dim     -> model axis (if divisible)
+  "vocab"   — embedding/vocab rows             -> model axis
+  "experts" — MoE expert dim                   -> expert/data axis
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import decl
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_decls(d_model: int):
+    return {"scale": decl((d_model,), ("embed",), init="ones")}
+
+
+def rms_norm(x: jnp.ndarray, p, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + Qwen2-VL multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)                         # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float, sections=(2, 1, 1)
+) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: positions (B, S, 3) = (temporal, height, width) ids.
+
+    The D/2 rotary frequencies are partitioned into three contiguous
+    sections proportional to ``sections`` (arXiv:2409.12191 §2.1); each
+    section rotates by its own positional channel.  Text tokens carry equal
+    (t,h,w) ids, which makes M-RoPE degenerate to standard RoPE there.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    total = sum(sections)
+    bounds = []
+    start = 0
+    for s in sections[:-1]:
+        start += (half * s) // total
+        bounds.append(start)
+    freqs = _rope_freqs(d, theta)                              # (half,)
+    sec_id = jnp.zeros((half,), jnp.int32)
+    for b in bounds:
+        sec_id = sec_id + (jnp.arange(half) >= b).astype(jnp.int32)
+    pos_per_freq = jnp.take_along_axis(
+        positions.astype(jnp.float32),                         # (B,S,3)
+        jnp.broadcast_to(sec_id[None, None, :], positions.shape[:2] + (half,)),
+        axis=-1,
+    )                                                          # (B,S,half)
+    angles = pos_per_freq * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward networks
+# ---------------------------------------------------------------------------
+
+def ffn_decls(d_model: int, d_ff: int, ffn_type: str):
+    if ffn_type == "swiglu":
+        return {
+            "w_gate": decl((d_model, d_ff), ("embed", "ffn")),
+            "w_up": decl((d_model, d_ff), ("embed", "ffn")),
+            "w_down": decl((d_ff, d_model), ("ffn", "embed")),
+        }
+    return {
+        "w_in": decl((d_model, d_ff), ("embed", "ffn")),
+        "w_out": decl((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def ffn(x: jnp.ndarray, p, ffn_type: str) -> jnp.ndarray:
+    if ffn_type == "swiglu":
+        gate = jax.nn.silu(x @ p["w_gate"])
+        return (gate * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_decls(padded_vocab: int, d_model: int, tie: bool):
+    d = {"embedding": decl((padded_vocab, d_model), ("vocab", "embed"), scale=1.0)}
+    if not tie:
+        d["lm_head"] = decl((d_model, padded_vocab), ("embed", "vocab"))
+    return d
+
+
+def embed(tokens: jnp.ndarray, p) -> jnp.ndarray:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, p) -> jnp.ndarray:
+    w = p.get("lm_head")
+    if w is None:
+        w = p["embedding"].T
+    return x @ w
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int) -> jnp.ndarray:
+    """Mean next-token CE in fp32; positions with label < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

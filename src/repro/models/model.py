@@ -1,0 +1,139 @@
+"""Unified model API over all architecture families + input-shape specs.
+
+``build_model(cfg)`` returns a ``ModelApi`` with the three entry points the
+launcher, serving engine and dry-run use.  ``input_specs`` builds
+ShapeDtypeStruct stand-ins for every model input for a given workload shape
+(never allocating), and ``concrete_inputs`` builds small real batches for
+CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.models.params import abstract_params, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One workload shape from the assignment."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+_ENC_LEN_DECODE = 4_096  # encoder length for enc-dec decode shapes
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """DESIGN.md §Arch-applicability: long_500k needs sub-quadratic state."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full attention: 500k dense KV is the excluded quadratic-state regime"
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    param_decls: dict
+    train_loss: Callable          # (params, batch) -> (loss, metrics)
+    prefill: Callable             # (params, batch, max_len) -> (logits, caches[, aux])
+    decode_step: Callable         # (params, caches, token, pos, max_len) -> (logits, caches)
+    cache_decls: Callable         # (batch, max_len) -> decl tree
+
+    def abstract(self, dtype=jnp.bfloat16):
+        return abstract_params(self.param_decls, dtype)
+
+    def init(self, key, dtype=jnp.bfloat16):
+        return init_params(self.param_decls, key, dtype)
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.arch_type == "encdec":
+        return ModelApi(
+            cfg=cfg,
+            param_decls=encdec.model_decls(cfg),
+            train_loss=lambda p, b: encdec.forward_train(p, b, cfg),
+            prefill=lambda p, b, max_len: encdec.prefill(p, b, cfg, max_len),
+            decode_step=lambda p, c, t, pos, max_len: encdec.decode_step(p, c, t, pos, cfg, max_len),
+            cache_decls=lambda batch, max_len: encdec.cache_decls(
+                cfg, batch, max_len, _ENC_LEN_DECODE
+            ),
+        )
+    return ModelApi(
+        cfg=cfg,
+        param_decls=transformer.model_decls(cfg),
+        train_loss=lambda p, b: transformer.forward_train(p, b, cfg),
+        prefill=lambda p, b, max_len: transformer.prefill(p, b, cfg, max_len)[:2],
+        decode_step=lambda p, c, t, pos, max_len: transformer.decode_step(p, c, t, pos, cfg, max_len),
+        cache_decls=lambda batch, max_len: transformer.cache_decls(cfg, batch, max_len),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+def _batch_struct(cfg: ModelConfig, b: int, s: int, mode: str, dtype) -> dict[str, Any]:
+    """Shapes of the model-input batch (shared by specs and concrete)."""
+    out: dict[str, Any] = {}
+    if cfg.arch_type == "encdec":
+        out["frontend_embeds"] = ((b, s if mode == "train" else _ENC_LEN_DECODE, cfg.d_model), dtype)
+        if mode != "decode":
+            out["tokens"] = ((b, s), jnp.int32)
+    else:
+        if mode != "decode":
+            out["tokens"] = ((b, s), jnp.int32)
+        if cfg.frontend == "vision":
+            out["frontend_embeds"] = ((b, min(cfg.frontend_tokens, s), cfg.d_model), dtype)
+            if cfg.mrope and mode != "decode":
+                out["positions3"] = ((b, s, 3), jnp.int32)
+    if mode == "train":
+        out["labels"] = ((b, s), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    struct = _batch_struct(cfg, shape.global_batch, shape.seq_len, shape.mode, dtype)
+    return {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt) in struct.items()}
+
+
+def decode_token_specs(shape: InputShape) -> tuple:
+    """(token, pos) stand-ins for decode shapes."""
+    return (
+        jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def concrete_inputs(cfg: ModelConfig, shape: InputShape, key, dtype=jnp.bfloat16) -> dict:
+    """Small real batches for smoke tests (reduced configs only)."""
+    struct = _batch_struct(cfg, shape.global_batch, shape.seq_len, shape.mode, dtype)
+    rng = np.random.default_rng(np.asarray(jax.random.key_data(key)).ravel()[-1])
+    out = {}
+    for k, (sh, dt) in struct.items():
+        if dt == jnp.int32:
+            if k == "positions3":
+                base = np.broadcast_to(np.arange(sh[1])[None, :, None], sh)
+                out[k] = jnp.asarray(base, jnp.int32)
+            else:
+                out[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, sh), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(sh) * 0.02, dtype)
+    return out

@@ -1,0 +1,143 @@
+"""Mixture-of-Experts FFN with top-k routing (Mixtral / Granite-MoE).
+
+Baseline implementation is the GShard/Mesh-TF capacity-based dispatch:
+tokens are routed to ``experts_per_token`` experts; each expert processes at
+most ``capacity = ceil(S*k/E * capacity_factor)`` tokens per example;
+overflow tokens fall through on the residual path.  Dispatch/combine are
+one-hot einsums — fully dense, shardable, and the collective pattern
+(all-to-all on the expert axis) is explicit to GSPMD.
+
+A sort-based "grouped" variant (``impl='grouped'``) removes the one-hot
+dispatch FLOPs (B*S*E*C*D) and is the beyond-paper optimization studied in
+EXPERIMENTS.md §Perf.
+
+Router load-balancing follows Switch Transformer: aux loss = E * Σ_e f_e·p_e.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ffn_decls
+from repro.models.params import decl
+
+
+def moe_decls(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": decl((d, e), ("embed", "experts")),
+        "w_gate": decl((e, d, f), ("experts", "embed", "ffn")),
+        "w_up": decl((e, d, f), ("experts", "embed", "ffn")),
+        "w_down": decl((e, f, d), ("experts", "ffn", "embed")),
+    }
+
+
+def capacity(tokens_per_example: int, cfg: ModelConfig, factor: float = 1.25) -> int:
+    cap = math.ceil(tokens_per_example * cfg.experts_per_token / cfg.num_experts * factor)
+    return max(8, -(-cap // 8) * 8)  # pad to a multiple of 8 for tiling
+
+
+def _router(x, p, cfg: ModelConfig):
+    """Top-k routing probabilities; returns (weights, expert_ids, aux_loss)."""
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,S,E)
+    top_p, top_ids = jax.lax.top_k(probs, cfg.experts_per_token)  # (B,S,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss.
+    e = cfg.num_experts
+    onehot = jax.nn.one_hot(top_ids, e, dtype=jnp.float32)        # (B,S,K,E)
+    frac_routed = onehot.sum(2).mean((0, 1))                      # f_e
+    frac_prob = probs.mean((0, 1))                                # p_e
+    aux = e * jnp.sum(frac_routed * frac_prob)
+    return top_p, top_ids, aux
+
+
+def _expert_ffn(inp, p, cfg: ModelConfig):
+    """inp: (E, B, C, D) -> (E, B, C, D); batched SwiGLU over experts."""
+    gate = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", inp, p["w_gate"]))
+    up = jnp.einsum("ebcd,edf->ebcf", inp, p["w_up"])
+    return jnp.einsum("ebcf,efd->ebcd", gate * up, p["w_down"])
+
+
+def moe_ffn(x: jnp.ndarray, p, cfg: ModelConfig, *, capacity_factor: float = 1.25):
+    """x: (B, S, D) -> (out, aux_loss).  GShard capacity dispatch."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = capacity(s, cfg, capacity_factor)
+    weights, ids, aux = _router(x, p, cfg)                         # (B,S,K)
+
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)             # (B,S,K,E)
+    # Position of each (token, k) within its expert's capacity buffer:
+    # cumulative count of prior routings to the same expert across (S, K).
+    flat = onehot.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                          # (B,S*K,E)
+    pos = pos.reshape(b, s, k, e)
+    pos_tok = jnp.take_along_axis(
+        pos, ids[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]                                                      # (B,S,K)
+    keep = pos_tok < c
+
+    # dispatch[b,s,e,c] / combine[b,s,e,c], built per routing slot k so the
+    # largest intermediate is (B,S,E,C) — never (B,S,K,E,C).
+    dispatch = jnp.zeros((b, s, e, c), jnp.float32)
+    combine = jnp.zeros((b, s, e, c), jnp.float32)
+    for kk in range(k):
+        oe = onehot[:, :, kk] * keep[:, :, kk, None]               # (B,S,E)
+        oc = jax.nn.one_hot(
+            jnp.minimum(pos_tok[:, :, kk], c - 1).astype(jnp.int32), c,
+            dtype=jnp.float32,
+        )                                                          # (B,S,C)
+        piece = jnp.einsum("bse,bsc->bsec", oe, oc)
+        dispatch = dispatch + piece
+        combine = combine + piece * weights[:, :, kk, None, None]
+
+    xin = x.astype(jnp.float32)
+    expert_in = jnp.einsum("bsec,bsd->ebcd", dispatch, xin).astype(x.dtype)
+    expert_out = _expert_ffn(expert_in, p, cfg)
+    out = jnp.einsum("bsec,ebcd->bsd", combine, expert_out.astype(jnp.float32))
+    return out.astype(x.dtype), aux
+
+
+def moe_ffn_grouped(x: jnp.ndarray, p, cfg: ModelConfig, *, capacity_factor: float = 1.25):
+    """Sort-free scatter/gather MoE (beyond-paper §Perf variant).
+
+    Replaces the (B,S,E,C) one-hot dispatch einsums with integer
+    scatter/gather: O(B·S·K·D) data movement instead of O(B·S·E·C·D) MACs.
+    Numerics match ``moe_ffn`` exactly (same capacity-drop rule).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = capacity(s, cfg, capacity_factor)
+    weights, ids, aux = _router(x, p, cfg)
+
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)
+    flat = onehot.reshape(b, s * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(b, s, k, e)
+    pos_tok = jnp.take_along_axis(
+        pos, ids[..., None].astype(jnp.int32), axis=-1
+    )[..., 0].astype(jnp.int32)                                    # (B,S,K)
+    keep = pos_tok < c
+    pos_safe = jnp.minimum(pos_tok, c - 1)
+
+    # Scatter tokens into (B, E, C, D) expert buffers.  Buffers stay in the
+    # model dtype: each (token, k) slot is written at most once (positions
+    # within an expert are unique), so no accumulation precision is lost —
+    # f32 buffers here doubled the dominant memory-roofline term (§Perf).
+    buf = jnp.zeros((b, e, c, d), x.dtype)
+    bidx = jnp.arange(b)[:, None]                                  # (B,1)
+    ids_flat = ids.reshape(b, s * k)
+    pos_flat = pos_safe.reshape(b, s * k)
+    src = jnp.broadcast_to(x[:, :, None, :], (b, s, k, d))
+    src = jnp.where(keep[..., None], src, jnp.zeros((), x.dtype)).reshape(b, s * k, d)
+    buf = buf.at[bidx, ids_flat, pos_flat].add(src)
+    expert_in = jnp.moveaxis(buf, 1, 0).reshape(e, b, c, d)
+    expert_out = _expert_ffn(expert_in, p, cfg).astype(jnp.float32)
+    expert_out = jnp.moveaxis(expert_out.reshape(e, b, c, d), 0, 1)  # (B,E,C,D)
+
+    # Gather back and weight.
+    gathered = expert_out[bidx, ids_flat, pos_flat].reshape(b, s, k, d)
+    out = (gathered * (weights * keep)[..., None]).sum(2)
+    return out.astype(x.dtype), aux

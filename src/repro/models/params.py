@@ -1,0 +1,79 @@
+"""Parameter declaration trees: one source of truth for shape, sharding and init.
+
+A model builder returns a nested dict of ``ParamDecl``; from it we derive
+(a) ``ShapeDtypeStruct`` trees for the multi-pod dry-run, (b)
+``PartitionSpec`` trees via the logical-axis rules in
+``repro.distributed.sharding``, and (c) materialized arrays for CPU smoke
+tests and the end-to-end examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical axis name per dim
+    init: str = "normal"           # normal | zeros | ones
+    scale: float | None = None     # default: 1/sqrt(fan_in)
+    dtype: str | None = None       # override (e.g. f32 recurrent state)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def decl(shape, axes, init="normal", scale=None, dtype=None) -> ParamDecl:
+    return ParamDecl(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def tree_map_decls(fn: Callable, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_decl)
+
+
+def abstract_params(decl_tree, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree — what the dry-run lowers against."""
+    return tree_map_decls(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype), decl_tree
+    )
+
+
+def init_params(decl_tree, key: jax.Array, dtype=jnp.bfloat16):
+    """Materialize parameters (smoke tests / examples; never the dry-run)."""
+    leaves, treedef = jax.tree_util.tree_flatten(decl_tree, is_leaf=is_decl)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(d: ParamDecl, k):
+        dt = d.dtype or dtype
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        scale = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(d, k) for d, k in zip(leaves, keys)]
+    )
+
+
+def param_bytes(decl_tree, bytes_per_el: int = 2) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree_map_decls(lambda d: math.prod(d.shape), decl_tree)
+    )
+    return sum(leaves) * bytes_per_el
+
+
+def count_params(decl_tree) -> int:
+    return param_bytes(decl_tree, 1)

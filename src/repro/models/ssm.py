@@ -1,0 +1,118 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Block: in_proj -> (z | x | B | C | dt), causal depthwise conv over (x,B,C),
+SiLU, softplus(dt), chunked SSD scan (Pallas kernel on TPU), gated RMSNorm,
+out_proj.  Decode keeps a (conv window, SSD state) pair per layer — O(1) in
+sequence length, which is what qualifies Mamba-2 for ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.config import ModelConfig
+from repro.models.params import decl
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state_dim
+    nh = cfg.ssm_num_heads
+    conv_ch = di + 2 * n
+    return di, n, nh, conv_ch
+
+
+def ssm_decls(cfg: ModelConfig):
+    d = cfg.d_model
+    di, n, nh, conv_ch = _dims(cfg)
+    return {
+        "w_in": decl((d, 2 * di + 2 * n + nh), ("embed", "ffn")),
+        "conv_w": decl((cfg.ssm_conv_width, conv_ch), (None, "ffn"), scale=0.5),
+        "conv_b": decl((conv_ch,), ("ffn",), init="zeros"),
+        "A_log": decl((nh,), (None,), init="ones"),
+        "dt_bias": decl((nh,), (None,), init="zeros"),
+        "D": decl((nh,), (None,), init="ones"),
+        "norm_scale": decl((di,), ("ffn",), init="ones"),
+        "w_out": decl((di, d), ("ffn", "embed")),
+    }
+
+
+def _split(zxbcdt, cfg: ModelConfig):
+    di, n, nh, _ = _dims(cfg)
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, x (B,S,C), w (W,C): out_t = Σ_k w_k x_{t-W+1+k}."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for k in range(width):
+        out = out + pad[:, k : k + s].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gated_rmsnorm(y, z, scale, eps):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_block(x: jnp.ndarray, p, cfg: ModelConfig):
+    """Train/prefill forward; x (B,S,D) -> (out, final_state)."""
+    b, s, _ = x.shape
+    di, n, nh, conv_ch = _dims(cfg)
+    z, xc, Bm, Cm, dt = _split(x @ p["w_in"], cfg)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    xc, Bm, Cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    xh = xc.reshape(b, s, nh, cfg.ssm_head_dim)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = ssd_ops.ssd(xh, dtp, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk_size)
+    y = _gated_rmsnorm(y.reshape(b, s, di), z, p["norm_scale"], cfg.norm_eps)
+    conv_tail = conv_in[:, -(cfg.ssm_conv_width - 1):]  # decode continuation
+    return y @ p["w_out"], (conv_tail, h)
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+def ssm_cache_decls(cfg: ModelConfig, batch: int):
+    di, n, nh, conv_ch = _dims(cfg)
+    return {
+        "conv": decl(
+            (batch, cfg.ssm_conv_width - 1, conv_ch),
+            ("cache_batch", None, "kv_heads"), init="zeros",
+        ),
+        "h": decl(
+            (batch, nh, cfg.ssm_head_dim, n),
+            ("cache_batch", "kv_heads", None, None), init="zeros", dtype="float32",
+        ),
+    }
+
+
+def ssm_decode_step(x: jnp.ndarray, cache, p, cfg: ModelConfig):
+    """x (B,1,D) -> (out (B,1,D), new_cache)."""
+    b = x.shape[0]
+    di, n, nh, conv_ch = _dims(cfg)
+    z, xc, Bm, Cm, dt = _split(x[:, 0] @ p["w_in"], cfg)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)               # (B, C)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = (window.astype(jnp.float32) * w[None]).sum(1) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xc, Bm, Cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    xh = xc.reshape(b, nh, cfg.ssm_head_dim)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = ssd_ops.ssd_decode_step(xh, dtp, A, Bm, Cm, p["D"], cache["h"])
+    y = _gated_rmsnorm(y.reshape(b, di), z, p["norm_scale"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, None]
+    return out, {"conv": window[:, 1:], "h": h}

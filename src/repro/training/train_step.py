@@ -1,0 +1,22 @@
+"""The jitted training step: loss -> grad -> clip -> AdamW."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.models.model import ModelApi
+from repro.training.optimizer import OptimizerConfig, adamw_update
+
+
+def build_train_step(api: ModelApi, opt_cfg: OptimizerConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(api.train_loss, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, stats = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **stats}
+
+    return train_step

@@ -1,0 +1,149 @@
+"""Unit + property tests for the allocation policies (paper Algorithm 1)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import allocator as alloc
+from repro.core.agents import paper_fleet, PAPER_ARRIVAL_RATES
+
+fleet = paper_fleet()
+LAM = jnp.asarray(PAPER_ARRIVAL_RATES, jnp.float32)
+
+
+class TestAdaptive:
+    def test_paper_allocation_exact(self):
+        """Algorithm 1 on Table I inputs -> the allocation behind Table II."""
+        g = alloc.adaptive_allocation(LAM, fleet.min_gpu, fleet.priority)
+        np.testing.assert_allclose(
+            np.asarray(g), [0.23865, 0.25380, 0.21150, 0.29605], atol=2e-4
+        )
+        # Σ g_i·T_i = 58.1 rps — the paper's adaptive throughput.
+        assert abs(float((g * fleet.base_throughput).sum()) - 58.1) < 0.05
+
+    def test_zero_demand_releases_everything(self):
+        g = alloc.adaptive_allocation(jnp.zeros(4), fleet.min_gpu, fleet.priority)
+        assert float(jnp.abs(g).sum()) == 0.0
+
+    def test_minimums_respected_when_capacity_allows(self):
+        lam = jnp.asarray([1.0, 1.0, 1.0], jnp.float32)
+        mins = jnp.asarray([0.1, 0.2, 0.3], jnp.float32)
+        pri = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+        g = alloc.adaptive_allocation(lam, mins, pri)
+        assert bool((g >= mins - 1e-6).all())
+
+    def test_priority_weighting(self):
+        """Same load/min, higher priority (lower P) -> no smaller share."""
+        lam = jnp.asarray([10.0, 10.0], jnp.float32)
+        mins = jnp.asarray([0.1, 0.1], jnp.float32)
+        g = alloc.adaptive_allocation(lam, mins, jnp.asarray([1.0, 3.0]))
+        assert float(g[0]) > float(g[1])
+
+    @hypothesis.given(
+        lam=st.lists(st.floats(0, 1e4), min_size=1, max_size=16),
+        mins=st.lists(st.floats(0, 1.0), min_size=1, max_size=16),
+        pri=st.lists(st.integers(1, 3), min_size=1, max_size=16),
+        g_total=st.floats(0.1, 4.0),
+    )
+    @hypothesis.settings(max_examples=200, deadline=None)
+    def test_capacity_invariant(self, lam, mins, pri, g_total):
+        n = min(len(lam), len(mins), len(pri))
+        g = alloc.adaptive_allocation(
+            jnp.asarray(lam[:n], jnp.float32),
+            jnp.asarray(mins[:n], jnp.float32),
+            jnp.asarray(pri[:n], jnp.float32),
+            g_total,
+        )
+        arr = np.asarray(g)
+        assert (arr >= -1e-6).all()
+        assert arr.sum() <= g_total * (1 + 1e-4)
+        assert not np.isnan(arr).any()
+
+    @hypothesis.given(scale=st.floats(0.01, 100.0))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_scale_invariance_in_arrivals(self, scale):
+        """d_i ∝ λ_i, so uniform λ scaling leaves the allocation unchanged."""
+        g1 = alloc.adaptive_allocation(LAM, fleet.min_gpu, fleet.priority)
+        g2 = alloc.adaptive_allocation(LAM * scale, fleet.min_gpu, fleet.priority)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+class TestBaselines:
+    def test_static_equal(self):
+        g = alloc.static_equal(4)
+        np.testing.assert_allclose(np.asarray(g), 0.25)
+
+    @pytest.mark.parametrize("t", [0, 1, 5, 103])
+    def test_round_robin_one_hot(self, t):
+        g = np.asarray(alloc.round_robin(jnp.asarray(t), 4))
+        assert g.sum() == 1.0
+        assert (g > 0).sum() == 1
+        assert g[t % 4] == 1.0
+
+
+class TestBeyondPaper:
+    @hypothesis.given(
+        q=st.lists(st.floats(0, 1e4), min_size=2, max_size=4),
+        lam=st.lists(st.floats(0, 1e3), min_size=2, max_size=4),
+    )
+    @hypothesis.settings(max_examples=100, deadline=None)
+    def test_water_filling_capacity(self, q, lam):
+        n = min(len(q), len(lam), fleet.num_agents)
+        g = alloc.water_filling(
+            jnp.asarray(q[:n], jnp.float32),
+            jnp.asarray(lam[:n], jnp.float32),
+            fleet.base_throughput[:n],
+            fleet.min_gpu[:n],
+        )
+        arr = np.asarray(g)
+        assert arr.sum() <= 1 + 1e-4 and (arr >= -1e-6).all()
+
+    def test_water_filling_equalizes_latency(self):
+        """Without binding minimums, q/(gT) should be equal across agents."""
+        q = jnp.asarray([100.0, 200.0, 400.0], jnp.float32)
+        T = jnp.asarray([10.0, 20.0, 40.0], jnp.float32)
+        g = alloc.water_filling(q, jnp.zeros(3), T, jnp.zeros(3))
+        lat = np.asarray(q / (g * T))
+        assert lat.std() / lat.mean() < 1e-4
+
+    def test_throughput_greedy_beats_adaptive_on_served(self):
+        """With loose minimums, greedy should serve >= adaptive's capacity."""
+        q = jnp.asarray([1000.0, 1000.0, 1000.0, 1000.0], jnp.float32)
+        mins = jnp.zeros(4)
+        g_greedy = alloc.throughput_greedy(q, LAM, fleet.base_throughput, mins)
+        g_adapt = alloc.adaptive_allocation(LAM, fleet.min_gpu, fleet.priority)
+        served_g = float((g_greedy * fleet.base_throughput).sum())
+        served_a = float((g_adapt * fleet.base_throughput).sum())
+        assert served_g >= served_a - 1e-3
+
+    def test_predictive_matches_adaptive_on_steady_state(self):
+        g1 = alloc.adaptive_allocation(LAM, fleet.min_gpu, fleet.priority)
+        g2 = alloc.predictive_adaptive(LAM, fleet.min_gpu, fleet.priority)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2))
+
+    @hypothesis.given(
+        q=st.lists(st.floats(0, 1e4), min_size=4, max_size=4),
+        lam=st.lists(st.floats(0, 500), min_size=4, max_size=4),
+    )
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_objective_descent_capacity_and_mins(self, q, lam):
+        g = alloc.objective_descent(
+            jnp.asarray(q, jnp.float32), jnp.asarray(lam, jnp.float32),
+            fleet.base_throughput, fleet.min_gpu, fleet.priority,
+        )
+        arr = np.asarray(g)
+        assert not np.isnan(arr).any()
+        assert arr.sum() <= 1 + 1e-4 and (arr >= -1e-6).all()
+
+    def test_objective_descent_no_worse_than_adaptive_on_eq2(self):
+        """The descent policy optimizes Eq.(2); it must score <= Algorithm 1."""
+        from repro.core.objective import step_objective
+
+        q = jnp.asarray([500.0, 300.0, 200.0, 100.0], jnp.float32)
+        g_a = alloc.adaptive_allocation(LAM, fleet.min_gpu, fleet.priority)
+        g_o = alloc.objective_descent(q, LAM, fleet.base_throughput,
+                                      fleet.min_gpu, fleet.priority, gamma=1.0)
+        ja = step_objective(g_a, q, LAM, fleet.base_throughput)
+        jo = step_objective(g_o, q, LAM, fleet.base_throughput)
+        assert float(jo) <= float(ja) + 1e-3

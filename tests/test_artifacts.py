@@ -1,0 +1,94 @@
+"""Dry-run artifact contract tests + HLO collective-parser unit tests.
+
+The artifact tests validate the recorded experiments/ tree (skipped when
+absent, e.g. on a fresh clone before running the launch scripts).
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.dryrun import collective_bytes
+from repro.models.model import INPUT_SHAPES, shape_applicable
+
+HAVE = os.path.isdir("experiments/dryrun")
+
+LONG_OK = {"mamba2-370m", "recurrentgemma-9b", "mixtral-8x7b"}
+
+
+class TestCollectiveParser:
+    HLO = """
+  %ag = bf16[16,1024]{1,0} all-gather(%p0), replica_groups={}
+  %ar.1 = f32[8,8]{1,0} all-reduce(%x), to_apply=%add
+  %ars = f32[4,4]{1,0} all-reduce-start(%y), to_apply=%add
+  %ard = f32[4,4]{1,0} all-reduce-done(%ars)
+  %rs = (f32[2,2]{1,0}, f32[2,2]{1,0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a.5 = f32[16]{0} all-to-all(%c), dimensions={0}
+  %cp = u32[128]{0} collective-permute(%d), source_target_pairs={{0,1}}
+  %dot = f32[8,8]{1,0} dot(%l, %r), lhs_contracting_dims={1}
+"""
+
+    def test_counts_each_kind_once(self):
+        out = collective_bytes(self.HLO)
+        assert out["all-gather"] == 16 * 1024 * 2
+        # all-reduce: plain + -start counted, -done not double-counted
+        assert out["all-reduce"] == 8 * 8 * 4 + 4 * 4 * 4
+        assert out["reduce-scatter"] == 2 * (2 * 2 * 4)  # tuple summed
+        assert out["all-to-all"] == 16 * 4
+        assert out["collective-permute"] == 128 * 4
+        assert out["total"] == sum(
+            out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                             "all-to-all", "collective-permute")
+        )
+
+    def test_ignores_non_collectives(self):
+        assert collective_bytes("%dot = f32[8,8]{1,0} dot(%a, %b)")["total"] == 0
+
+
+@pytest.mark.skipif(not HAVE, reason="no dry-run artifacts recorded")
+class TestDryRunArtifacts:
+    @pytest.mark.parametrize("mesh", ["pod1", "pod2"])
+    def test_every_pair_recorded_and_clean(self, mesh):
+        ok, skipped, errors = 0, 0, []
+        for arch in ARCH_IDS:
+            for shape in INPUT_SHAPES:
+                path = f"experiments/dryrun/{arch}_{shape}_{mesh}.json"
+                assert os.path.exists(path), path
+                d = json.load(open(path))
+                if "error" in d:
+                    errors.append(path)
+                elif "skipped" in d:
+                    skipped += 1
+                else:
+                    ok += 1
+        assert not errors, errors
+        assert ok == 33 and skipped == 7
+
+    def test_skips_match_applicability_matrix(self):
+        for arch in ARCH_IDS:
+            d = json.load(open(f"experiments/dryrun/{arch}_long_500k_pod1.json"))
+            expect_ok = arch in LONG_OK
+            assert ("skipped" not in d) == expect_ok, arch
+
+    def test_memory_fits_hbm(self):
+        """Per-device argument bytes must fit a 16 GB chip for every pair."""
+        from repro.launch.mesh import HW
+
+        for f in glob.glob("experiments/dryrun/*_pod1.json"):
+            d = json.load(open(f))
+            pd = d.get("per_device")
+            if not pd:
+                continue
+            arg = pd.get("argument_bytes")
+            if arg is not None:
+                assert arg < HW["hbm_bytes"], (f, arg)
+
+    def test_multipod_halves_or_matches_per_device_flops(self):
+        """512 chips never do MORE per-device work than 256 (sanity)."""
+        for arch in ("llama3-405b", "mixtral-8x7b", "mamba2-370m"):
+            a = json.load(open(f"experiments/dryrun/{arch}_train_4k_pod1.json"))
+            b = json.load(open(f"experiments/dryrun/{arch}_train_4k_pod2.json"))
+            if "per_device" in a and "per_device" in b:
+                assert b["per_device"]["flops"] <= a["per_device"]["flops"] * 1.05

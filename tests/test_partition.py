@@ -1,0 +1,52 @@
+"""Spatial partition planner invariants (integer analogue of Algorithm 1)."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
+from repro.distributed.partition import PartitionPlan, plan_partition, should_repartition
+
+fleet = paper_fleet()
+
+
+def test_paper_fleet_on_256_chips():
+    p = plan_partition(np.asarray(PAPER_ARRIVAL_RATES), np.asarray(fleet.min_gpu),
+                       np.asarray(fleet.priority), 256)
+    assert sum(p.chips) == 256
+    # mirrors the fractional allocation (0.239/0.254/0.211/0.296)*256
+    np.testing.assert_allclose(p.chips, [61, 65, 54, 76], atol=1)
+
+
+@hypothesis.given(
+    lam=st.lists(st.floats(0, 1e3), min_size=2, max_size=12),
+    chips=st.sampled_from([8, 64, 256, 512]),
+    seed=st.integers(0, 100),
+)
+@hypothesis.settings(max_examples=150, deadline=None)
+def test_chips_conserved_and_busy_agents_nonzero(lam, chips, seed):
+    n = len(lam)
+    rng = np.random.default_rng(seed)
+    mins = rng.uniform(0.01, 1.0 / n, n)
+    pri = rng.integers(1, 4, n).astype(float)
+    lam = np.asarray(lam)
+    p = plan_partition(lam, mins, pri, chips)
+    assert sum(p.chips) == (chips if lam.sum() > 0 else 0)
+    if lam.sum() > 0 and chips >= n:
+        for li, ci in zip(lam, p.chips):
+            if li > 0:
+                assert ci >= 1  # busy agents never starve
+
+
+def test_idle_fleet_releases_chips():
+    p = plan_partition(np.zeros(4), np.asarray(fleet.min_gpu),
+                       np.asarray(fleet.priority), 256)
+    assert sum(p.chips) == 0
+
+
+def test_repartition_hysteresis():
+    t = np.asarray([100.0, 30.0])
+    cur = PartitionPlan((128, 128), (0.5, 0.5), 256)
+    slightly = PartitionPlan((140, 116), (0.55, 0.45), 256)
+    much = PartitionPlan((240, 16), (0.94, 0.06), 256)
+    assert not should_repartition(cur, slightly, t)   # < 10% projected gain
+    assert should_repartition(cur, much, t)

@@ -1,0 +1,36 @@
+"""Profile derivation from recorded dry-run artifacts (skipped if absent)."""
+import os
+
+import pytest
+
+from repro.core.profiles import available_archs, fleet_from_archs, profile_arch
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists("experiments/roofline"),
+    reason="no roofline artifacts; run repro.launch.roofline",
+)
+
+
+def test_profiles_exist_for_all_decode_archs():
+    archs = available_archs()
+    assert len(archs) >= 5
+    for a in archs:
+        p = profile_arch(a)
+        assert p["throughput_tokens_per_s"] > 0
+        assert 0.0 < p["min_gpu"] <= 0.9
+        assert p["model_mb"] > 0
+
+
+def test_bigger_models_are_slower():
+    small = profile_arch("qwen2-vl-2b")
+    big = profile_arch("llama3-405b")
+    if small and big:
+        assert small["throughput_tokens_per_s"] > big["throughput_tokens_per_s"]
+        assert small["min_gpu"] < big["min_gpu"]
+
+
+def test_fleet_builds_and_validates():
+    archs = available_archs()[:3]
+    fleet = fleet_from_archs({a: 1 + i % 2 for i, a in enumerate(archs)})
+    fleet.validate()
+    assert fleet.num_agents == len(archs)

@@ -1,0 +1,40 @@
+"""Cross-validation: lax.scan simulator vs the independent numpy oracle."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import workload
+from repro.core.agents import paper_fleet, PAPER_ARRIVAL_RATES
+from repro.core.reference_sim import simulate_numpy
+from repro.core.simulator import simulate
+
+FLEET = paper_fleet()
+POLICIES = ("static_equal", "round_robin", "adaptive", "water_filling", "predictive")
+
+
+@hypothesis.given(
+    rates=st.lists(st.floats(0, 300), min_size=4, max_size=4),
+    policy=st.sampled_from(POLICIES),
+    steps=st.integers(5, 40),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_scan_matches_numpy_oracle(rates, policy, steps):
+    arr = workload.constant(jnp.asarray(rates, jnp.float32), steps)
+    tr = simulate(policy, arr, FLEET)
+    ref = simulate_numpy(policy, np.asarray(arr), FLEET)
+    for field in ("allocation", "served", "queue", "latency"):
+        got = np.asarray(getattr(tr, field), np.float64)
+        np.testing.assert_allclose(got, ref[field], rtol=2e-4, atol=2e-3,
+                                   err_msg=f"{policy}/{field}")
+
+
+def test_paper_workload_all_policies_match():
+    arr = workload.constant(jnp.asarray(PAPER_ARRIVAL_RATES), 100)
+    for policy in POLICIES:
+        tr = simulate(policy, arr, FLEET)
+        ref = simulate_numpy(policy, np.asarray(arr), FLEET)
+        np.testing.assert_allclose(
+            np.asarray(tr.queue, np.float64), ref["queue"], rtol=2e-4, atol=0.5,
+            err_msg=policy,
+        )

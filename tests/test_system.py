@@ -1,0 +1,45 @@
+"""End-to-end behaviour tests for the paper's system: the adaptive
+allocator beats round-robin on latency at equal cost when driving REAL
+models through the serving engine (the paper's Table II claim, verified on
+the integrated stack rather than the simulator)."""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.agents import AgentSpec, Fleet
+from repro.models.model import build_model
+from repro.serving.engine import AgentRuntime, FleetEngine
+
+
+def _run(policy: str, ticks: int = 16):
+    fleet = Fleet.from_specs([
+        AgentSpec("coordinator", 100.0, 100.0, 0.10, 1),
+        AgentSpec("specialist", 500.0, 30.0, 0.35, 1),
+    ])
+    key = jax.random.key(0)
+    rts = {}
+    for name, arch in (("coordinator", "qwen2-vl-2b"), ("specialist", "granite-8b")):
+        cfg = get_config(arch, reduced=True)
+        api = build_model(cfg)
+        rts[name] = AgentRuntime(name, api, api.init(key), max_len=48, batch_slots=2)
+    eng = FleetEngine(fleet, rts, policy=policy, budget_tokens=24)
+    rng = np.random.default_rng(0)
+    for t in range(ticks):
+        eng.submit("coordinator", rng.integers(0, 100, 4), 2)
+        if t % 2 == 0:
+            eng.submit("specialist", rng.integers(0, 100, 4), 2)
+        eng.step()
+    return eng.metrics()
+
+
+def test_adaptive_beats_round_robin_on_latency():
+    a = _run("adaptive")
+    r = _run("round_robin")
+    assert a["completed"] >= r["completed"]
+    assert a["avg_latency_ticks"] <= r["avg_latency_ticks"] + 1e-9
+
+
+def test_adaptive_comparable_throughput_to_static():
+    a = _run("adaptive")
+    s = _run("static_equal")
+    assert a["tokens_generated"] >= 0.8 * s["tokens_generated"]
