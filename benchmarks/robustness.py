@@ -1,5 +1,6 @@
 """Paper §V-B: 3x overload degradation, 10x spike adaptation speed,
-single-agent domination containment."""
+single-agent domination containment — all four scenarios evaluated in one
+vmapped sweep call (traces kept for the time-series checks)."""
 from __future__ import annotations
 
 import json
@@ -10,18 +11,29 @@ import numpy as np
 
 from repro.core import workload
 from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
-from repro.core.simulator import run_policy, simulate
+from repro.core.sweep import Scenario, sweep
 
 
 def run(out_dir: str = "experiments/paper") -> list[str]:
     fleet = paper_fleet()
     rates = jnp.asarray(PAPER_ARRIVAL_RATES)
-    res = {}
+    scenarios = (
+        Scenario("constant", workload.constant(rates, 100)),
+        Scenario("overload_3x", workload.scaled(rates, 100, 3.0)),
+        Scenario("spike_10x",
+                 workload.spike(rates, 100, spike_agent=3, spike_start=50, spike_len=30)),
+        Scenario("dominated",
+                 workload.dominated(rates, 100, agent=0, share=0.9)),
+    )
+    res = sweep(fleet, scenarios, policies=("adaptive",), keep_traces=True)
+    alloc_grid = np.asarray(res.traces.allocation)  # (1, W, S, N)
+    w = {name: i for i, name in enumerate(res.scenario_names)}
+    out = {}
 
     # (1) demand 3x capacity: graceful degradation, no starvation.
-    base = run_policy("adaptive", workload.constant(rates, 100), fleet)
-    over = run_policy("adaptive", workload.scaled(rates, 100, 3.0), fleet)
-    res["overload_3x"] = {
+    base = res.summary("adaptive", "constant")
+    over = res.summary("adaptive", "overload_3x")
+    out["overload_3x"] = {
         "base_latency": round(base.avg_latency, 1),
         "overload_latency": round(over.avg_latency, 1),
         "latency_degradation_pct": round(100 * (over.avg_latency / base.avg_latency - 1), 1),
@@ -30,30 +42,27 @@ def run(out_dir: str = "experiments/paper") -> list[str]:
 
     # (2) 10x spike: how many steps until the spiked agent's allocation
     # reaches 95% of its new steady-state share (paper: within 100 ms).
-    arr = workload.spike(rates, 100, spike_agent=3, spike_start=50, spike_len=30)
-    tr = simulate("adaptive", arr, fleet)
-    g = np.asarray(tr.allocation)[:, 3]
+    g = alloc_grid[0, w["spike_10x"], :, 3]
     steady = g[70]
     steps = int(np.argmax(g[50:71] >= 0.95 * steady))
-    res["spike_10x"] = {
+    out["spike_10x"] = {
         "pre_spike_alloc": round(float(g[49]), 4),
         "post_spike_alloc": round(float(steady), 4),
         "steps_to_95pct": steps,
     }
 
     # (3) one agent with 90% of requests must not monopolize the GPU.
-    tr = simulate("adaptive", workload.dominated(rates, 100, agent=0, share=0.9), fleet)
-    gm = np.asarray(tr.allocation).mean(0)
-    res["domination_90pct"] = {
+    gm = alloc_grid[0, w["dominated"]].mean(0)
+    out["domination_90pct"] = {
         "dominant_agent_share": round(float(gm[0]), 3),
         "min_other_share": round(float(gm[1:].min()), 3),
     }
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "robustness.json"), "w") as fh:
-        json.dump(res, fh, indent=1)
+        json.dump(out, fh, indent=1)
     return [
-        f"robustness/overload,0,degradation={res['overload_3x']['latency_degradation_pct']}%",
-        f"robustness/spike,0,steps={res['spike_10x']['steps_to_95pct']}",
-        f"robustness/domination,0,max_share={res['domination_90pct']['dominant_agent_share']}",
+        f"robustness/overload,0,degradation={out['overload_3x']['latency_degradation_pct']}%",
+        f"robustness/spike,0,steps={out['spike_10x']['steps_to_95pct']}",
+        f"robustness/domination,0,max_share={out['domination_90pct']['dominant_agent_share']}",
     ]

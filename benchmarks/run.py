@@ -14,6 +14,7 @@ from benchmarks import (
     robustness,
     roofline,
     serving_engine,
+    sweep_grid,
     table2_metrics,
 )
 
@@ -21,6 +22,7 @@ MODULES = (
     ("table2", table2_metrics),
     ("fig2", fig2_timeseries),
     ("robustness", robustness),
+    ("sweep_grid", sweep_grid),
     ("allocator_scaling", allocator_scaling),
     ("roofline", roofline),
     ("serving_engine", serving_engine),

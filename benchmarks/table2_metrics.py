@@ -1,6 +1,6 @@
-"""Paper Table II: latency / throughput / cost / latency-std for the three
-allocation strategies (+ the beyond-paper policies), with allocator call
-timing (the paper's <1 ms O(N) claim)."""
+"""Paper Table II: latency / throughput / cost / latency-std for every
+registered policy, evaluated through the vmapped sweep grid, with allocator
+call timing (the paper's <1 ms O(N) claim)."""
 from __future__ import annotations
 
 import json
@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro.core import workload
 from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
 from repro.core.allocator import adaptive_allocation
-from repro.core.simulator import run_policy
+from repro.core.sweep import Scenario, sweep
 
 PAPER_TABLE2 = {
     "static_equal": {"avg_latency": 110.3, "total_throughput": 60.0, "cost": 0.020},
@@ -24,12 +24,11 @@ PAPER_TABLE2 = {
 
 def run(out_dir: str = "experiments/paper") -> list[str]:
     fleet = paper_fleet()
-    arr = workload.constant(jnp.asarray(PAPER_ARRIVAL_RATES), 100)
+    scen = Scenario("constant", workload.constant(jnp.asarray(PAPER_ARRIVAL_RATES), 100))
+    res = sweep(fleet, (scen,))
     rows = {}
-    for policy in ("static_equal", "round_robin", "adaptive",
-                   "water_filling", "predictive", "throughput_greedy",
-                   "objective_descent"):
-        s = run_policy(policy, arr, fleet)
+    for policy in res.policy_names:
+        s = res.summary(policy, "constant")
         rows[policy] = {
             "avg_latency": round(s.avg_latency, 1),
             "latency_std": round(s.latency_std, 2),

@@ -7,9 +7,14 @@ from repro.core.agents import (
     paper_fleet,
 )
 from repro.core.allocator import (
-    POLICY_NAMES,
     adaptive_allocation,
+    dispatch,
+    get_policy,
+    policy_id,
+    policy_names,
+    policy_switch,
     predictive_adaptive,
+    register_policy,
     round_robin,
     static_equal,
     throughput_greedy,
@@ -18,19 +23,41 @@ from repro.core.allocator import (
 from repro.core import workload
 from repro.core.objective import ObjectiveWeights, step_objective
 from repro.core.simulator import (
-    POLICY_IDS,
+    METRIC_NAMES,
     SimConfig,
     SimSummary,
     SimTrace,
     run_policy,
     simulate,
+    simulate_core,
     summarize,
+    trace_metrics,
+)
+from repro.core.sweep import (
+    Scenario,
+    SweepResult,
+    SweepSummary,
+    scenario_library,
+    sweep,
 )
 
 __all__ = [
     "AgentSpec", "Fleet", "PAPER_ARRIVAL_RATES", "T4_PRICE_PER_HOUR",
     "paper_fleet", "POLICY_NAMES", "adaptive_allocation", "predictive_adaptive",
     "round_robin", "static_equal", "throughput_greedy", "water_filling",
-    "ObjectiveWeights", "step_objective", "POLICY_IDS", "SimConfig",
-    "SimSummary", "SimTrace", "run_policy", "simulate", "summarize", "workload",
+    "register_policy", "policy_names", "policy_id", "get_policy", "dispatch",
+    "policy_switch", "ObjectiveWeights", "step_objective", "POLICY_IDS",
+    "SimConfig", "SimSummary", "SimTrace", "run_policy", "simulate",
+    "simulate_core", "summarize", "trace_metrics", "workload", "METRIC_NAMES",
+    "Scenario", "SweepResult", "SweepSummary", "scenario_library", "sweep",
 ]
+
+
+def __getattr__(attr: str):
+    # Live views over the registry — import-time snapshots would go stale
+    # the moment a policy is registered after package import.
+    if attr == "POLICY_NAMES":
+        return policy_names()
+    if attr == "POLICY_IDS":
+        return {name: i for i, name in enumerate(policy_names())}
+    raise AttributeError(f"module {__name__!r} has no attribute {attr!r}")

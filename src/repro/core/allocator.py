@@ -14,11 +14,26 @@ separately in EXPERIMENTS.md §Perf:
 
 All policies are pure jnp, O(N), and jittable; each returns g with
 Σ g <= g_total and g >= 0.
+
+Every policy is also registered in the **policy registry** (bottom of this
+module) under a uniform signature
+
+    (t, lam_obs, lam_ema, queue, fleet, g_total) -> g
+
+The registry is the single source of truth for dispatch: the simulator's
+``lax.switch`` branches, the serving engine's per-tick dispatch, and the
+vmapped sweep grid (``core/sweep.py``) are all built from it, so adding a
+policy here makes it available everywhere with no other edits.
 """
 from __future__ import annotations
 
+from typing import Callable, Sequence, TYPE_CHECKING
+
 import jax
 import jax.numpy as jnp
+
+if TYPE_CHECKING:
+    from repro.core.agents import Fleet
 
 _EPS = 1e-9
 
@@ -180,12 +195,130 @@ def objective_descent(
     return jnp.where(busy.any(), g, jnp.zeros_like(g))
 
 
-POLICY_NAMES = (
-    "static_equal",
-    "round_robin",
-    "adaptive",
-    "water_filling",
-    "predictive",
-    "throughput_greedy",
-    "objective_descent",
-)
+# ---------------------------------------------------------------------------
+# Policy registry — the single dispatch table for the whole codebase.
+#
+# Each entry is a thin adapter over the pure functions above with the uniform
+# signature ``(t, lam_obs, lam_ema, queue, fleet, g_total) -> g``; the pure
+# functions stay faithful to Algorithm 1 and are still importable directly.
+# ---------------------------------------------------------------------------
+
+PolicyFn = Callable[..., jnp.ndarray]
+
+_REGISTRY: dict[str, PolicyFn] = {}
+
+
+def register_policy(name: str) -> Callable[[PolicyFn], PolicyFn]:
+    """Register ``fn(t, lam_obs, lam_ema, queue, fleet, g_total) -> g``.
+
+    Registration alone makes the policy reachable from ``simulate()``, the
+    serving engine, and the sweep grid; registry order defines the stable
+    integer policy id used by ``lax.switch``.
+    """
+
+    def deco(fn: PolicyFn) -> PolicyFn:
+        if name in _REGISTRY:
+            raise ValueError(f"policy {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def policy_names() -> tuple[str, ...]:
+    """All registered policies, in registration (= policy-id) order."""
+    return tuple(_REGISTRY)
+
+
+def policy_id(name: str) -> int:
+    """Integer id of a registered policy (its index in ``policy_names()``)."""
+    get_policy(name)
+    return policy_names().index(name)
+
+
+def get_policy(name: str) -> PolicyFn:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown policy {name!r}; registered policies: {policy_names()}"
+        )
+    return _REGISTRY[name]
+
+
+def dispatch(
+    name: str,
+    t: jnp.ndarray,
+    lam_obs: jnp.ndarray,
+    lam_ema: jnp.ndarray,
+    queue: jnp.ndarray,
+    fleet: "Fleet",
+    g_total: float = 1.0,
+) -> jnp.ndarray:
+    """Eager by-name dispatch (the serving-engine path)."""
+    return get_policy(name)(t, lam_obs, lam_ema, queue, fleet, g_total)
+
+
+def policy_switch(
+    policy_id: jnp.ndarray,
+    t: jnp.ndarray,
+    lam_obs: jnp.ndarray,
+    lam_ema: jnp.ndarray,
+    queue: jnp.ndarray,
+    fleet: "Fleet",
+    g_total: float = 1.0,
+    names: Sequence[str] | None = None,
+) -> jnp.ndarray:
+    """Traced dispatch over the registry (the simulator / sweep path).
+
+    ``names`` pins the branch order for a jitted caller; it defaults to the
+    live registry order.
+    """
+    names = policy_names() if names is None else tuple(names)
+    branches = tuple(
+        (lambda fn=_REGISTRY[n]: fn(t, lam_obs, lam_ema, queue, fleet, g_total))
+        for n in names
+    )
+    return jax.lax.switch(policy_id, branches)
+
+
+@register_policy("static_equal")
+def _static_equal_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    return static_equal(fleet.num_agents, g_total)
+
+
+@register_policy("round_robin")
+def _round_robin_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    return round_robin(t, fleet.num_agents, g_total)
+
+
+@register_policy("adaptive")
+def _adaptive_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    return adaptive_allocation(lam_obs, fleet.min_gpu, fleet.priority, g_total)
+
+
+@register_policy("water_filling")
+def _water_filling_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    return water_filling(queue, lam_obs, fleet.base_throughput, fleet.min_gpu, g_total)
+
+
+@register_policy("predictive")
+def _predictive_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    return predictive_adaptive(lam_ema, fleet.min_gpu, fleet.priority, g_total)
+
+
+@register_policy("throughput_greedy")
+def _throughput_greedy_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    return throughput_greedy(queue, lam_obs, fleet.base_throughput, fleet.min_gpu, g_total)
+
+
+@register_policy("objective_descent")
+def _objective_descent_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    return objective_descent(
+        queue, lam_obs, fleet.base_throughput, fleet.min_gpu, fleet.priority, g_total
+    )
+
+
+def __getattr__(attr: str):
+    # POLICY_NAMES is derived from the registry, never hand-maintained.
+    if attr == "POLICY_NAMES":
+        return policy_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {attr!r}")

@@ -34,7 +34,10 @@ def simulate_numpy(
 
     for t in range(steps):
         lam = np.asarray(arrivals[t], np.float64)
-        ema = ema_alpha * lam + (1 - ema_alpha) * ema
+        # EMA is seeded with arrivals[0]; applying the update again at t=0
+        # would double-count the first observation.
+        if t > 0:
+            ema = ema_alpha * lam + (1 - ema_alpha) * ema
         if policy == "static_equal":
             g = np.full(n, g_total / n)
         elif policy == "round_robin":

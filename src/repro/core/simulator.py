@@ -15,13 +15,14 @@ Semantics reconstructed from the paper (DESIGN.md §6):
   across policies, as in Table II.
 
 The whole run is one ``lax.scan``; policies are selected with ``lax.switch``
-so a (policies × workloads) sweep can be ``vmap``-ed.
+built from the allocator's policy registry, so a (policies × workloads)
+sweep can be ``vmap``-ed — see ``core/sweep.py`` for the grid runner.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +32,12 @@ from repro.core.agents import Fleet, T4_PRICE_PER_HOUR
 
 _EPS = 1e-9
 
-# Integer policy ids, stable across the codebase (== index in POLICY_NAMES).
-POLICY_IDS = {name: i for i, name in enumerate(alloc.POLICY_NAMES)}
+
+def __getattr__(attr: str):
+    # Back-compat alias; the registry is authoritative (alloc.policy_id).
+    if attr == "POLICY_IDS":
+        return {name: i for i, name in enumerate(alloc.policy_names())}
+    raise AttributeError(f"module {__name__!r} has no attribute {attr!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,44 +85,29 @@ class SimSummary:
     mean_queue: float
 
 
-def _policy_step(
-    policy_id: jnp.ndarray,
-    t: jnp.ndarray,
-    lam_obs: jnp.ndarray,
-    lam_ema: jnp.ndarray,
-    queue: jnp.ndarray,
-    fleet: Fleet,
-    g_total: float,
-) -> jnp.ndarray:
-    n = fleet.num_agents
-    branches = (
-        lambda: alloc.static_equal(n, g_total),
-        lambda: alloc.round_robin(t, n, g_total),
-        lambda: alloc.adaptive_allocation(lam_obs, fleet.min_gpu, fleet.priority, g_total),
-        lambda: alloc.water_filling(queue, lam_obs, fleet.base_throughput, fleet.min_gpu, g_total),
-        lambda: alloc.predictive_adaptive(lam_ema, fleet.min_gpu, fleet.priority, g_total),
-        lambda: alloc.throughput_greedy(queue, lam_obs, fleet.base_throughput, fleet.min_gpu, g_total),
-        lambda: alloc.objective_descent(queue, lam_obs, fleet.base_throughput,
-                                        fleet.min_gpu, fleet.priority, g_total),
-    )
-    return jax.lax.switch(policy_id, branches)
-
-
-@functools.partial(jax.jit, static_argnames=("fleet_static", "config"))
-def _simulate_jit(
+def simulate_core(
     policy_id: jnp.ndarray,
     arrivals: jnp.ndarray,
-    fleet_arrays: tuple,
-    fleet_static: tuple,
+    fleet: Fleet,
     config: SimConfig,
+    policy_names: Sequence[str] | None = None,
 ) -> SimTrace:
-    fleet = Fleet(fleet_static, *fleet_arrays)
+    """Pure scan body — jit/vmap-able over ``policy_id`` and ``arrivals``.
+
+    The EMA carry is seeded with the first observation; the update is skipped
+    at t=0 so that observation is not applied twice.
+    """
+    names = alloc.policy_names() if policy_names is None else tuple(policy_names)
 
     def step(carry, inp):
         queue, lam_ema = carry
         t, lam = inp
-        lam_ema = alloc.ema_forecast(lam_ema, lam, config.ema_alpha)
-        g = _policy_step(policy_id, t, lam, lam_ema, queue, fleet, config.g_total)
+        lam_ema = jnp.where(
+            t > 0, alloc.ema_forecast(lam_ema, lam, config.ema_alpha), lam_ema
+        )
+        g = alloc.policy_switch(
+            policy_id, t, lam, lam_ema, queue, fleet, config.g_total, names
+        )
         capacity = g * fleet.base_throughput
         served = jnp.minimum(capacity, queue + lam)
         new_queue = queue + lam - served
@@ -133,40 +123,86 @@ def _simulate_jit(
     return SimTrace(g, served, queue, latency, arrivals)
 
 
+@functools.partial(jax.jit, static_argnames=("fleet_static", "config", "policy_names"))
+def _simulate_jit(
+    policy_id: jnp.ndarray,
+    arrivals: jnp.ndarray,
+    fleet_arrays: tuple,
+    fleet_static: tuple,
+    config: SimConfig,
+    policy_names: tuple,
+) -> SimTrace:
+    fleet = Fleet(fleet_static, *fleet_arrays)
+    return simulate_core(policy_id, arrivals, fleet, config, policy_names)
+
+
 def simulate(
     policy: str,
     arrivals: jnp.ndarray,
     fleet: Fleet,
     config: SimConfig = SimConfig(),
 ) -> SimTrace:
-    """Run one policy over an (S, N) arrival matrix."""
+    """Run one registered policy over an (S, N) arrival matrix."""
     fleet.validate()
     arrays = (fleet.model_size_mb, fleet.base_throughput, fleet.min_gpu, fleet.priority)
     return _simulate_jit(
-        jnp.asarray(POLICY_IDS[policy]), arrivals, arrays, fleet.names, config
+        jnp.asarray(alloc.policy_id(policy)), arrivals, arrays, fleet.names, config,
+        alloc.policy_names(),
     )
+
+
+# Order of the metric vector returned by trace_metrics (and of the metric
+# axis in sweep grids).
+METRIC_NAMES = (
+    "avg_latency",
+    "latency_std",
+    "total_throughput",
+    "gpu_utilization",
+    "mean_queue",
+    "littles_law_latency",
+)
+
+
+def trace_metrics(trace: SimTrace) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Table II reductions for one trace, jit/vmap-safe.
+
+    Returns (metric vector in METRIC_NAMES order, per-agent mean latency,
+    per-agent mean throughput).  The single definition behind both
+    ``summarize`` and the sweep grid.
+    """
+    per_lat = trace.latency.mean(axis=0)
+    per_tput = trace.served.mean(axis=0)
+    # Unclipped long-run latency: mean backlog over long-run service rate.
+    longrun_rate = jnp.maximum(per_tput, _EPS)
+    littles = (trace.queue.mean(axis=0) / longrun_rate).mean()
+    vec = jnp.stack([
+        per_lat.mean(),
+        per_lat.std(),
+        per_tput.sum(),
+        trace.allocation.sum(axis=1).mean(),
+        trace.queue.mean(),
+        littles,
+    ])
+    return vec, per_lat, per_tput
 
 
 def summarize(policy: str, trace: SimTrace, config: SimConfig = SimConfig()) -> SimSummary:
     """Table II metrics from a trace."""
-    per_agent_lat = trace.latency.mean(axis=0)
-    per_agent_tput = trace.served.mean(axis=0)
+    vec, per_agent_lat, per_agent_tput = trace_metrics(trace)
     duration_s = trace.served.shape[0]
     cost = config.num_gpus * duration_s / 3600.0 * config.price_per_hour
-    # Unclipped long-run latency: mean backlog over long-run service rate.
-    longrun_rate = jnp.maximum(trace.served.mean(axis=0), _EPS)
-    littles = (trace.queue.mean(axis=0) / longrun_rate).mean()
+    m = dict(zip(METRIC_NAMES, (float(x) for x in vec)))
     return SimSummary(
         policy=policy,
-        avg_latency=float(per_agent_lat.mean()),
-        latency_std=float(per_agent_lat.std()),
+        avg_latency=m["avg_latency"],
+        latency_std=m["latency_std"],
         per_agent_latency=tuple(float(x) for x in per_agent_lat),
-        total_throughput=float(per_agent_tput.sum()),
+        total_throughput=m["total_throughput"],
         per_agent_throughput=tuple(float(x) for x in per_agent_tput),
         cost=float(cost),
-        gpu_utilization=float(trace.allocation.sum(axis=1).mean()),
-        littles_law_latency=float(littles),
-        mean_queue=float(trace.queue.mean()),
+        gpu_utilization=m["gpu_utilization"],
+        littles_law_latency=m["littles_law_latency"],
+        mean_queue=m["mean_queue"],
     )
 
 

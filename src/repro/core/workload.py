@@ -3,9 +3,20 @@
 The paper simulates 100 one-second steps with fixed per-agent arrival rates
 (80/40/45/25 rps) and a fixed random seed.  Constant arrivals reproduce
 Table II exactly; Poisson, spike, diurnal and domination processes support
-the robustness study (§V-B) and beyond-paper experiments.
+the robustness study (§V-B) and beyond-paper experiments.  Two further
+beyond-paper processes feed the sweep grid (``core/sweep.py``):
 
-Every generator returns an (S, N) float32 array of arrivals per step.
+* ``bursty``     — two-state Markov-modulated (on/off) arrivals, independent
+                   per agent: each agent flips between a burst regime
+                   (``on_factor``·rate) and a lull (``off_factor``·rate) with
+                   geometric dwell times, the classic MMPP burstiness model.
+* ``correlated`` — fleet-wide surges: one shared on/off Markov chain scales
+                   *all* agents simultaneously, modelling a collaborative-
+                   reasoning cascade where one user request fans out to every
+                   agent at once.
+
+Every generator returns an (S, N) float32 array of arrivals per step and is
+deterministic given its PRNG key, so sweeps are exactly reproducible.
 """
 from __future__ import annotations
 
@@ -63,3 +74,61 @@ def diurnal(rates: jnp.ndarray, num_steps: int, period: int = 50, depth: float =
     t = jnp.arange(num_steps, dtype=jnp.float32)[:, None]
     mod = 1.0 + depth * jnp.sin(2.0 * jnp.pi * t / period)
     return rates[None, :] * mod
+
+
+def bursty(
+    rates: jnp.ndarray,
+    num_steps: int,
+    key: jax.Array,
+    on_factor: float = 4.0,
+    off_factor: float = 0.25,
+    p_enter: float = 0.08,
+    p_exit: float = 0.25,
+) -> jnp.ndarray:
+    """Markov-modulated on/off bursts, independent per agent.
+
+    Each agent carries a two-state chain: a lull enters a burst with
+    probability ``p_enter`` per step, a burst ends with ``p_exit``; the
+    arrival rate is ``on_factor``·rate in a burst and ``off_factor``·rate in
+    a lull.  Mean dwell times are geometric (1/p), giving heavy temporal
+    correlation that constant/Poisson workloads lack.
+    """
+    rates = jnp.asarray(rates, jnp.float32)
+    n = rates.shape[0]
+    key_init, key_steps = jax.random.split(key)
+    state0 = jax.random.bernoulli(key_init, 0.5, (n,))
+    u = jax.random.uniform(key_steps, (num_steps, n))
+
+    def step(state, ut):
+        nxt = jnp.where(state, ut >= p_exit, ut < p_enter)
+        factor = jnp.where(nxt, on_factor, off_factor)
+        return nxt, factor
+
+    _, factors = jax.lax.scan(step, state0, u)
+    return rates[None, :] * factors
+
+
+def correlated(
+    rates: jnp.ndarray,
+    num_steps: int,
+    key: jax.Array,
+    surge_factor: float = 4.0,
+    p_enter: float = 0.05,
+    p_exit: float = 0.2,
+) -> jnp.ndarray:
+    """Fleet-wide multi-agent surges: all agents spike *together*.
+
+    A single shared on/off Markov chain multiplies every agent's rate by
+    ``surge_factor`` during a surge — the arrival pattern of a collaborative
+    reasoning burst, where one upstream request cascades to the whole fleet.
+    """
+    rates = jnp.asarray(rates, jnp.float32)
+    u = jax.random.uniform(key, (num_steps,))
+
+    def step(state, ut):
+        nxt = jnp.where(state, ut >= p_exit, ut < p_enter)
+        factor = jnp.where(nxt, surge_factor, 1.0)
+        return nxt, factor
+
+    _, factors = jax.lax.scan(step, jnp.asarray(False), u)
+    return rates[None, :] * factors[:, None]

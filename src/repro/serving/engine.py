@@ -76,11 +76,14 @@ class FleetEngine:
         policy: str = "adaptive",
         budget_tokens: int = 64,
         g_total: float = 1.0,
+        ema_alpha: float = 0.3,
     ):
         assert set(fleet.names) == set(runtimes)
+        alloc.get_policy(policy)  # fail fast on unregistered policies
         self.fleet = fleet
         self.runtimes = [runtimes[n] for n in fleet.names]
         self.policy = policy
+        self.ema_alpha = ema_alpha
         self.budget_tokens = budget_tokens
         self.g_total = g_total
         self.tick = 0
@@ -104,26 +107,13 @@ class FleetEngine:
     # -- allocation ----------------------------------------------------------
 
     def _allocate(self, lam: np.ndarray, queues: np.ndarray) -> np.ndarray:
-        f = self.fleet
         t = jnp.asarray(self.tick)
         lam_j, q_j = jnp.asarray(lam, jnp.float32), jnp.asarray(queues, jnp.float32)
-        self._ema = 0.3 * lam + 0.7 * self._ema
-        if self.policy == "adaptive":
-            g = alloc.adaptive_allocation(lam_j, f.min_gpu, f.priority, self.g_total)
-        elif self.policy == "static_equal":
-            g = alloc.static_equal(f.num_agents, self.g_total)
-        elif self.policy == "round_robin":
-            g = alloc.round_robin(t, f.num_agents, self.g_total)
-        elif self.policy == "water_filling":
-            g = alloc.water_filling(q_j, lam_j, f.base_throughput, f.min_gpu, self.g_total)
-        elif self.policy == "predictive":
-            g = alloc.predictive_adaptive(jnp.asarray(self._ema, jnp.float32),
-                                          f.min_gpu, f.priority, self.g_total)
-        elif self.policy == "objective_descent":
-            g = alloc.objective_descent(q_j, lam_j, f.base_throughput,
-                                        f.min_gpu, f.priority, self.g_total)
-        else:
-            raise ValueError(self.policy)
+        ema_j = alloc.ema_forecast(
+            jnp.asarray(self._ema, jnp.float32), lam_j, self.ema_alpha
+        )
+        self._ema = np.asarray(ema_j)
+        g = alloc.dispatch(self.policy, t, lam_j, ema_j, q_j, self.fleet, self.g_total)
         return np.asarray(g)
 
     # -- model stepping ------------------------------------------------------

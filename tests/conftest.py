@@ -1,0 +1,72 @@
+"""Shared test configuration.
+
+``hypothesis`` is an optional dev dependency (see pyproject.toml).  When it
+is installed we pin a deterministic profile so property tests are
+reproducible in CI; when it is missing we install a minimal stub into
+``sys.modules`` *before* the test modules import it, so
+
+* all example-based tests still collect and run, and
+* every ``@hypothesis.given`` test skips cleanly instead of erroring.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import pytest
+
+try:
+    import hypothesis
+except ImportError:
+    def _given(*args, **kwargs):
+        given_names = set(kwargs)
+        num_positional = len(args)
+
+        def deco(fn):
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items() if name not in given_names]
+            # Positional strategies are matched against the rightmost
+            # parameters; hide that many as well.
+            if num_positional:
+                keep = keep[:-num_positional]
+
+            @functools.wraps(fn)
+            def skipper(*_a, **_k):
+                pytest.skip("hypothesis not installed; property test skipped")
+
+            # Hide the strategy-driven parameters so pytest does not look
+            # for fixtures with those names.
+            skipper.__signature__ = sig.replace(parameters=keep)
+            return skipper
+
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    def _strategy(*_args, **_kwargs):
+        return None
+
+    _stub = types.ModuleType("hypothesis")
+    _stub.given = _given
+    _stub.settings = _settings
+    _stub.assume = lambda *_a, **_k: True
+    _stub.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None
+    )
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in (
+        "lists", "floats", "integers", "booleans", "sampled_from",
+        "tuples", "one_of", "just", "text", "composite",
+    ):
+        setattr(_st, _name, _strategy)
+    _stub.strategies = _st
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _st
+else:
+    hypothesis.settings.register_profile(
+        "repro", derandomize=True, deadline=None, print_blob=True
+    )
+    hypothesis.settings.load_profile("repro")

@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core import allocator as alloc
 from repro.core.agents import AgentSpec, Fleet
 from repro.models.model import build_model
 from repro.serving.engine import AgentRuntime, FleetEngine
@@ -16,7 +17,7 @@ def _fleet_2():
     ])
 
 
-def _engine(policy="adaptive"):
+def _engine(policy="adaptive", budget_tokens=32, **kwargs):
     fleet = _fleet_2()
     key = jax.random.key(0)
     rts = {}
@@ -24,7 +25,7 @@ def _engine(policy="adaptive"):
         cfg = get_config(arch, reduced=True)
         api = build_model(cfg)
         rts[name] = AgentRuntime(name, api, api.init(key), max_len=48, batch_slots=2)
-    return FleetEngine(fleet, rts, policy=policy, budget_tokens=32)
+    return FleetEngine(fleet, rts, policy=policy, budget_tokens=budget_tokens, **kwargs)
 
 
 @pytest.mark.parametrize("policy", ["adaptive", "static_equal", "round_robin",
@@ -40,6 +41,36 @@ def test_engine_completes_requests(policy):
     m = eng.metrics()
     assert m["completed"] > 0
     assert m["tokens_generated"] >= m["completed"] * 3
+
+
+def test_every_registered_policy_dispatches_in_engine():
+    """Regression: every POLICY_NAMES entry (incl. throughput_greedy, which
+    used to raise ValueError here) must run end-to-end through the engine."""
+    eng = _engine()
+    rng = np.random.default_rng(3)
+    for policy in alloc.policy_names():
+        eng.policy = policy
+        eng.submit("fast", rng.integers(0, 50, 4), 2)
+        eng.step()
+    assert eng.tick == len(alloc.policy_names())
+    for h in eng.history:
+        assert sum(h["allocation"]) <= 1.0 + 1e-4
+        assert min(h["allocation"]) >= -1e-6
+
+
+def test_engine_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="registered policies"):
+        _engine("not_a_policy")
+
+
+def test_engine_ema_uses_configured_alpha():
+    eng = _engine("predictive", budget_tokens=16, ema_alpha=0.5)
+    eng.submit("fast", np.arange(4), 1)
+    eng.step()
+    # zeros seed + one update: ema = alpha * lam
+    np.testing.assert_allclose(eng._ema, [0.5, 0.0], atol=1e-6)
+    eng.step()
+    np.testing.assert_allclose(eng._ema, [0.25, 0.0], atol=1e-6)
 
 
 def test_allocation_capacity_every_tick():

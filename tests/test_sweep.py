@@ -1,0 +1,173 @@
+"""Policy-registry + vmapped sweep-grid tests.
+
+Covers the acceptance invariants: registry completeness (every policy
+reachable through ``simulate()``), grid shape/dtype, the Σg <= g_total and
+g >= 0 capacity invariants across all policies × all scenario generators,
+and a Table II smoke check on the paper's constant workload.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import allocator as alloc
+from repro.core import workload
+from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
+from repro.core.simulator import SimConfig, run_policy, simulate
+from repro.core.sweep import (
+    METRIC_NAMES,
+    Scenario,
+    scenario_library,
+    sweep,
+)
+
+FLEET = paper_fleet()
+RATES = jnp.asarray(PAPER_ARRIVAL_RATES, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    """One full-registry sweep over the standard library (traces kept)."""
+    scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=60, seed=0)
+    return scenarios, sweep(FLEET, scenarios, keep_traces=True)
+
+
+class TestRegistry:
+    def test_at_least_seven_policies(self):
+        assert len(alloc.policy_names()) >= 7
+
+    def test_policy_names_alias_tracks_registry(self):
+        assert alloc.POLICY_NAMES == alloc.policy_names()
+
+    def test_ids_are_registry_order(self):
+        for i, name in enumerate(alloc.policy_names()):
+            assert alloc.policy_id(name) == i
+
+    def test_unknown_policy_raises_with_known_names(self):
+        with pytest.raises(ValueError, match="registered policies"):
+            alloc.get_policy("nope")
+
+    def test_every_policy_reachable_from_simulator(self):
+        arr = workload.constant(RATES, 5)
+        for policy in alloc.policy_names():
+            tr = simulate(policy, arr, FLEET)
+            assert np.isfinite(np.asarray(tr.allocation)).all(), policy
+
+    def test_dispatch_matches_direct_adaptive_call(self):
+        lam = RATES
+        g_direct = alloc.adaptive_allocation(lam, FLEET.min_gpu, FLEET.priority)
+        g_dispatch = alloc.dispatch(
+            "adaptive", jnp.asarray(0), lam, lam, jnp.zeros_like(lam), FLEET, 1.0
+        )
+        np.testing.assert_allclose(np.asarray(g_direct), np.asarray(g_dispatch))
+
+
+class TestScenarioLibrary:
+    def test_library_size_and_shapes(self):
+        scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=40, seed=1)
+        assert len(scenarios) >= 7
+        names = [s.name for s in scenarios]
+        assert len(set(names)) == len(names)
+        for s in scenarios:
+            assert s.arrivals.shape == (40, 4), s.name
+            assert s.arrivals.dtype == jnp.float32, s.name
+            assert bool((s.arrivals >= 0).all()), s.name
+
+    def test_bursty_is_markov_modulated(self):
+        import jax
+
+        arr = np.asarray(workload.bursty(RATES, 200, jax.random.key(3),
+                                         on_factor=4.0, off_factor=0.25))
+        ratio = arr / np.asarray(RATES)[None, :]
+        assert set(np.round(np.unique(ratio), 4)) <= {0.25, 4.0}
+        assert (ratio == 4.0).any() and (ratio == 0.25).any()
+
+    def test_correlated_surges_hit_all_agents_together(self):
+        import jax
+
+        arr = np.asarray(workload.correlated(RATES, 200, jax.random.key(4)))
+        ratio = arr / np.asarray(RATES)[None, :]
+        # per-step modulation factor is shared across the fleet
+        assert np.allclose(ratio, ratio[:, :1])
+        assert (ratio > 1.0).any() and (ratio == 1.0).any()
+
+    def test_generators_deterministic_given_seed(self):
+        a = scenario_library(PAPER_ARRIVAL_RATES, num_steps=30, seed=7)
+        b = scenario_library(PAPER_ARRIVAL_RATES, num_steps=30, seed=7)
+        for sa, sb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(sa.arrivals), np.asarray(sb.arrivals))
+
+
+class TestSweepGrid:
+    def test_grid_shape_and_dtype(self, grid):
+        scenarios, res = grid
+        P, W = len(alloc.policy_names()), len(scenarios)
+        assert res.metrics.shape == (P, W, len(METRIC_NAMES))
+        assert res.metrics.dtype == np.float32
+        assert np.isfinite(res.metrics).all()
+        assert res.per_agent_latency.shape == (P, W, FLEET.num_agents)
+        assert res.per_agent_throughput.shape == (P, W, FLEET.num_agents)
+
+    def test_capacity_invariant_all_policies_all_scenarios(self, grid):
+        _, res = grid
+        g = np.asarray(res.traces.allocation)  # (P, W, S, N)
+        assert (g >= -1e-6).all()
+        assert (g.sum(axis=-1) <= res.config.g_total + 1e-4).all()
+        assert (np.asarray(res.traces.queue) >= -1e-3).all()
+
+    def test_table_rows_cover_the_grid(self, grid):
+        scenarios, res = grid
+        table = res.table()
+        assert len(table.rows) == len(res.policy_names) * len(scenarios)
+        assert table.columns[:2] == ("policy", "scenario")
+        assert set(METRIC_NAMES) <= set(table.columns)
+        csv = table.to_csv_lines()
+        assert len(csv) == len(table.rows) + 1
+
+    def test_cells_match_run_policy(self, grid):
+        scenarios, res = grid
+        arr = scenarios[0].arrivals  # constant
+        for policy in res.policy_names:
+            got = res.summary(policy, "constant")
+            want = run_policy(policy, arr, FLEET)
+            assert abs(got.avg_latency - want.avg_latency) < 1e-3, policy
+            assert abs(got.total_throughput - want.total_throughput) < 1e-3, policy
+            assert abs(got.latency_std - want.latency_std) < 1e-3, policy
+            assert abs(got.cost - want.cost) < 1e-9, policy
+
+    def test_policy_subset_sweep(self):
+        scen = (Scenario("constant", workload.constant(RATES, 20)),)
+        res = sweep(FLEET, scen, policies=("adaptive", "round_robin"))
+        assert res.policy_names == ("adaptive", "round_robin")
+        assert res.metrics.shape[0] == 2
+
+    def test_table2_smoke_adaptive_beats_round_robin(self):
+        scen = (Scenario("constant", workload.constant(RATES, 100)),)
+        res = sweep(FLEET, scen)
+        adaptive = res.summary("adaptive", "constant")
+        rr = res.summary("round_robin", "constant")
+        assert adaptive.avg_latency < rr.avg_latency
+        # the paper's headline: ~85% latency reduction at equal cost
+        assert 1 - adaptive.avg_latency / rr.avg_latency > 0.84
+        assert abs(adaptive.cost - rr.cost) < 1e-9
+
+
+class TestEmaSeeding:
+    def test_first_step_not_double_counted(self):
+        """Predictive at t=0 must see the seed EMA (= arrivals[0]), and the
+        t=1 EMA must be one single update away from it."""
+        cfg = SimConfig(ema_alpha=0.5)
+        arr = jnp.stack([
+            jnp.asarray([100.0, 0.0, 0.0, 0.0], jnp.float32),
+            jnp.asarray([0.0, 100.0, 0.0, 0.0], jnp.float32),
+        ])
+        tr = simulate("predictive", arr, FLEET, cfg)
+        g0 = np.asarray(tr.allocation[0])
+        expect0 = np.asarray(
+            alloc.predictive_adaptive(arr[0], FLEET.min_gpu, FLEET.priority, cfg.g_total)
+        )
+        np.testing.assert_allclose(g0, expect0, atol=1e-6)
+        ema1 = alloc.ema_forecast(arr[0], arr[1], cfg.ema_alpha)
+        expect1 = np.asarray(
+            alloc.predictive_adaptive(ema1, FLEET.min_gpu, FLEET.priority, cfg.g_total)
+        )
+        np.testing.assert_allclose(np.asarray(tr.allocation[1]), expect1, atol=1e-6)
