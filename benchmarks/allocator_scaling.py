@@ -1,4 +1,11 @@
-"""The paper's O(N) complexity claim: allocator wall time vs fleet size."""
+"""The paper's O(N) complexity claim: allocator wall time vs fleet size.
+
+Two curves: (a) the bare Algorithm 1 call, as in the paper; (b) the same
+sizes driven through the mask-aware policy registry on padded synthetic
+fleets (half the slots masked off), showing the agent-validity mask adds no
+asymptotic cost.  See ``benchmarks/fleet_scaling.py`` for the system-level
+(full sweep per simulated step) version of the claim.
+"""
 from __future__ import annotations
 
 import json
@@ -8,30 +15,51 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import allocator as alloc
+from repro.core.agents import pad_fleet, synthetic_fleet
 from repro.core.allocator import adaptive_allocation
+
+SIZES = (4, 16, 64, 256, 1024, 4096)
+REPS = 200
+
+
+def _time(fn, *args) -> float:
+    fn(*args).block_until_ready()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / REPS * 1e6
 
 
 def run(out_dir: str = "experiments/paper") -> list[str]:
-    timings = {}
-    for n in (4, 16, 64, 256, 1024, 4096):
+    raw, masked = {}, {}
+    for n in SIZES:
         key = jax.random.key(n)
         lam = jax.random.uniform(key, (n,), minval=1.0, maxval=100.0)
         mins = jnp.full((n,), 0.5 / n)
         pri = jnp.ones((n,))
         f = jax.jit(lambda l, m, p: adaptive_allocation(l, m, p))
-        f(lam, mins, pri).block_until_ready()
-        t0 = time.perf_counter()
-        reps = 200
-        for _ in range(reps):
-            f(lam, mins, pri).block_until_ready()
-        timings[n] = (time.perf_counter() - t0) / reps * 1e6
+        raw[n] = _time(f, lam, mins, pri)
+
+        # Registry path: n live agents padded into 2n masked slots.
+        fleet = pad_fleet(synthetic_fleet(n, seed=n), 2 * n)
+        lam_p = jnp.pad(lam, (0, n))
+        zeros = jnp.zeros_like(lam_p)
+        pid = jnp.asarray(alloc.policy_id("adaptive"))
+        names = alloc.policy_names()
+        g = jax.jit(
+            lambda t, lo, le, q, fl: alloc.policy_switch(pid, t, lo, le, q, fl, 1.0, names)
+        )
+        masked[n] = _time(g, jnp.asarray(0), lam_p, lam_p, zeros, fleet)
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "allocator_scaling.json"), "w") as fh:
-        json.dump(timings, fh, indent=1)
+        json.dump({"raw_us": raw, "masked_registry_us": masked}, fh, indent=1)
     # sub-millisecond at paper scale; growth factor 4 -> 4096 agents
-    growth = timings[4096] / timings[4]
+    growth = raw[4096] / raw[4]
+    mgrowth = masked[4096] / masked[4]
     return [
-        f"scaling/alloc_n4,{timings[4]:.1f},sub_ms={timings[4] < 1000}",
-        f"scaling/alloc_n4096,{timings[4096]:.1f},growth_1024x_agents={growth:.1f}x",
+        f"scaling/alloc_n4,{raw[4]:.1f},sub_ms={raw[4] < 1000}",
+        f"scaling/alloc_n4096,{raw[4096]:.1f},growth_1024x_agents={growth:.1f}x",
+        f"scaling/alloc_masked_n4096,{masked[4096]:.1f},growth_1024x_agents={mgrowth:.1f}x",
     ]

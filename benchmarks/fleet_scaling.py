@@ -1,0 +1,83 @@
+"""System-level O(N) claim: full jitted sweep wall time per simulated step
+vs fleet size.
+
+The paper argues Algorithm 1 is O(N); ``allocator_scaling`` times the bare
+allocator.  This benchmark times the *whole evaluation surface* — the jitted
+(policy × scenario) sweep over ``simulate_core``, i.e. allocator + queue
+dynamics + metric reductions — per simulated step at N ∈ {4, 8, 16, 64,
+256} agents, plus the single batched (fleet × policy × scenario) grid that
+covers every size at once through the padded/masked fleet axis.
+
+Writes ``experiments/paper/fleet_scaling.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import workload
+from repro.core.agents import synthetic_fleet
+from repro.core.sweep import scenario_library, sweep, sweep_fleets
+
+FLEET_SIZES = (4, 8, 16, 64, 256)
+NUM_STEPS = 50
+SEED = 0
+REPS = 20          # timing samples per per-fleet grid
+BATCHED_REPS = 3   # the batched grid covers all sizes at once; it is slow
+
+
+def _time(fn, reps: int) -> float:
+    """Mean wall time (us) over ``reps`` calls, after a warmup/compile call."""
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(out_dir: str = "experiments/paper") -> list[str]:
+    per_fleet = {}
+    fleets = [synthetic_fleet(n, seed=n) for n in FLEET_SIZES]
+    for n, fleet in zip(FLEET_SIZES, fleets):
+        rates = workload.synthetic_rates(n, seed=n)
+        scenarios = scenario_library(rates, num_steps=NUM_STEPS, seed=SEED)
+        wall_us = _time(lambda: sweep(fleet, scenarios), REPS)
+        res = sweep(fleet, scenarios)
+        cells = len(res.policy_names) * len(res.scenario_names)
+        per_fleet[n] = {
+            "grid_us": wall_us,
+            "us_per_step": wall_us / NUM_STEPS,
+            "us_per_step_per_cell": wall_us / (NUM_STEPS * cells),
+            "cells": cells,
+        }
+
+    # The batched path: every fleet size in ONE padded (F, P, W) grid,
+    # sharded across jax.devices().
+    rate_vectors = [workload.synthetic_rates(n, seed=n) for n in FLEET_SIZES]
+    batched_us = _time(
+        lambda: sweep_fleets(fleets, rate_vectors, num_steps=NUM_STEPS, seed=SEED),
+        BATCHED_REPS,
+    )
+    res = sweep_fleets(fleets, rate_vectors, num_steps=NUM_STEPS, seed=SEED)
+    batched = {
+        "grid_us": batched_us,
+        "us_per_step": batched_us / NUM_STEPS,
+        "fleets": len(FLEET_SIZES),
+        "padded_width": max(FLEET_SIZES),
+        "cells": int(res.metrics[..., 0].size),
+    }
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fleet_scaling.json"), "w") as fh:
+        json.dump(
+            {"num_steps": NUM_STEPS, "per_fleet": per_fleet, "batched": batched},
+            fh, indent=1,
+        )
+
+    growth = per_fleet[256]["us_per_step"] / per_fleet[4]["us_per_step"]
+    return [
+        f"scaling/sweep_step_n4,{per_fleet[4]['us_per_step']:.1f},cells={per_fleet[4]['cells']}",
+        f"scaling/sweep_step_n256,{per_fleet[256]['us_per_step']:.1f},growth_64x_agents={growth:.1f}x",
+        f"scaling/fleet_grid,{batched_us:.1f},fleets={len(FLEET_SIZES)};padded_n={max(FLEET_SIZES)}",
+    ]

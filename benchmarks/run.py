@@ -11,6 +11,7 @@ import traceback
 from benchmarks import (
     allocator_scaling,
     fig2_timeseries,
+    fleet_scaling,
     robustness,
     roofline,
     serving_engine,
@@ -24,6 +25,7 @@ MODULES = (
     ("robustness", robustness),
     ("sweep_grid", sweep_grid),
     ("allocator_scaling", allocator_scaling),
+    ("fleet_scaling", fleet_scaling),
     ("roofline", roofline),
     ("serving_engine", serving_engine),
 )

@@ -4,7 +4,11 @@ from repro.core.agents import (
     Fleet,
     PAPER_ARRIVAL_RATES,
     T4_PRICE_PER_HOUR,
+    pad_fleet,
     paper_fleet,
+    scale_fleet,
+    stack_fleets,
+    synthetic_fleet,
 )
 from repro.core.allocator import (
     adaptive_allocation,
@@ -37,19 +41,23 @@ from repro.core.sweep import (
     Scenario,
     SweepResult,
     SweepSummary,
+    fleet_scenario_library,
     scenario_library,
     sweep,
+    sweep_fleets,
 )
 
 __all__ = [
     "AgentSpec", "Fleet", "PAPER_ARRIVAL_RATES", "T4_PRICE_PER_HOUR",
-    "paper_fleet", "POLICY_NAMES", "adaptive_allocation", "predictive_adaptive",
+    "paper_fleet", "pad_fleet", "scale_fleet", "stack_fleets", "synthetic_fleet",
+    "POLICY_NAMES", "adaptive_allocation", "predictive_adaptive",
     "round_robin", "static_equal", "throughput_greedy", "water_filling",
     "register_policy", "policy_names", "policy_id", "get_policy", "dispatch",
     "policy_switch", "ObjectiveWeights", "step_objective", "POLICY_IDS",
     "SimConfig", "SimSummary", "SimTrace", "run_policy", "simulate",
     "simulate_core", "summarize", "trace_metrics", "workload", "METRIC_NAMES",
-    "Scenario", "SweepResult", "SweepSummary", "scenario_library", "sweep",
+    "Scenario", "SweepResult", "SweepSummary", "fleet_scenario_library",
+    "scenario_library", "sweep", "sweep_fleets",
 ]
 
 

@@ -1,15 +1,36 @@
-"""Agent fleet specifications (paper §III-A, Table I).
+"""Agent fleet specifications (paper §III-A, Table I) as a JAX pytree.
 
 An agent is characterized by (M_i, T_i, R_i, P_i): model size (MB), base
 throughput at full GPU (requests/s), minimum GPU fraction, and priority
 (1 = high, 2 = medium, 3 = low).  The fleet is stored struct-of-arrays so the
 allocator and simulator are fully vectorized jnp (O(N), jittable).
+
+``Fleet`` is a **registered pytree**: the numeric arrays (including the
+``active`` validity mask) are leaves and the ``names`` tuple is static aux
+data, so fleets flow directly through ``jax.jit`` / ``jax.vmap`` /
+``jax.device_put`` with no array/static plumbing at call sites.  The mask is
+what makes *batches of heterogeneous fleet sizes* one array program:
+
+* every fleet carries ``active`` ∈ {0,1}^N; real agents are 1, padding is 0;
+* ``pad_fleet`` grows a fleet to ``n_max`` slots with inert padding
+  (T=1, R=0, P=1, active=0) — policies give padded slots exactly g = 0 and
+  metric reductions ignore them (see ``core/allocator.py`` /
+  ``core/simulator.py``);
+* ``stack_fleets`` pads a list of fleets to a common width and stacks every
+  leaf along a new leading fleet axis, ready for ``vmap`` over fleets
+  (``core/sweep.py::sweep_fleets``).
+
+Generators: ``paper_fleet()`` is the paper's exact Table I; ``scale_fleet``
+tiles it to N agents (min-GPU rescaled so Σ R_i is preserved);
+``synthetic_fleet(n, seed)`` draws a reproducible random heterogeneous fleet
+for agent-count scaling studies.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -25,19 +46,50 @@ class AgentSpec:
     priority: int           # P_i: 1=high, 2=medium, 3=low
 
 
+@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class Fleet:
-    """Struct-of-arrays view of N agents, ready for vectorized allocation."""
+    """Struct-of-arrays view of N agent slots, ready for jit/vmap.
+
+    ``active`` is the agent-validity mask: 1.0 for real agents, 0.0 for
+    padding slots introduced by ``pad_fleet``/``stack_fleets``.  It defaults
+    to all-ones, so single unpadded fleets behave exactly as before.
+    """
 
     names: tuple[str, ...]
     model_size_mb: jnp.ndarray   # (N,)
     base_throughput: jnp.ndarray  # (N,)
     min_gpu: jnp.ndarray          # (N,)
     priority: jnp.ndarray         # (N,) float for jnp division
+    active: jnp.ndarray = None    # (N,) validity mask, defaults to ones
+
+    def __post_init__(self):
+        if self.active is None:
+            object.__setattr__(
+                self, "active", jnp.ones(len(self.names), jnp.float32)
+            )
+
+    # -- pytree protocol: arrays are leaves, names are static aux data. ------
+
+    def tree_flatten(self):
+        children = (self.model_size_mb, self.base_throughput,
+                    self.min_gpu, self.priority, self.active)
+        return children, self.names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(names, *children)
 
     @property
     def num_agents(self) -> int:
+        """Static slot count N (padded width; use ``num_active`` for a
+        traced count of real agents)."""
         return len(self.names)
+
+    @property
+    def num_active(self) -> jnp.ndarray:
+        """Traced number of real (non-padding) agents."""
+        return self.active.sum()
 
     @staticmethod
     def from_specs(specs: Sequence[AgentSpec]) -> "Fleet":
@@ -53,12 +105,15 @@ class Fleet:
         """Static sanity constraints (checked eagerly, outside jit)."""
         mins = np.asarray(self.min_gpu)
         pris = np.asarray(self.priority)
+        mask = np.asarray(self.active)
         if (mins < 0).any() or (mins > 1).any():
             raise ValueError(f"min_gpu out of [0,1]: {mins}")
         if (pris < 1).any():
             raise ValueError(f"priority must be >= 1: {pris}")
         if (np.asarray(self.base_throughput) <= 0).any():
             raise ValueError("base_throughput must be positive")
+        if not np.isin(mask, (0.0, 1.0)).all():
+            raise ValueError(f"active mask must be 0/1: {mask}")
 
 
 def paper_fleet() -> Fleet:
@@ -69,6 +124,111 @@ def paper_fleet() -> Fleet:
         AgentSpec("specialist_vision", 1500.0, 60.0, 0.25, 2),
         AgentSpec("specialist_reasoning", 3000.0, 30.0, 0.35, 1),
     ])
+
+
+def scale_fleet(fleet: Fleet, n: int) -> Fleet:
+    """Tile ``fleet`` to ``n`` agents, preserving total minimum guarantees.
+
+    Agent k inherits the profile of ``fleet`` agent ``k % N``; the tiled
+    ``min_gpu`` vector is renormalized to the *original* Σ R_i (computed
+    from the actual tiled sum, so partial tiles are handled exactly) — the
+    fleet stays schedulable under the same G_total at any size.
+    """
+    base = fleet.num_agents
+    if n < 1:
+        raise ValueError(f"fleet size must be >= 1, got {n}")
+    if (np.asarray(fleet.active) != 1.0).any():
+        raise ValueError(
+            "scale_fleet needs an unpadded fleet; tiling masked slots would "
+            "resurrect padding as real agents"
+        )
+    idx = np.arange(n) % base
+    take = lambda a: np.asarray(a, np.float32)[idx]
+    mins = take(fleet.min_gpu)
+    target = float(np.asarray(fleet.min_gpu, np.float32).sum())
+    if mins.sum() > 0:
+        mins = mins * (target / mins.sum())
+    return Fleet(
+        names=tuple(f"{fleet.names[i]}_{k}" for k, i in enumerate(idx)),
+        model_size_mb=jnp.asarray(take(fleet.model_size_mb)),
+        base_throughput=jnp.asarray(take(fleet.base_throughput)),
+        min_gpu=jnp.asarray(mins),
+        priority=jnp.asarray(take(fleet.priority)),
+    )
+
+
+def synthetic_fleet(n: int, seed: int = 0, total_min_gpu: float = 0.8) -> Fleet:
+    """A reproducible random heterogeneous fleet of ``n`` agents.
+
+    Profiles are drawn in the paper's Table I ranges; minimum guarantees are
+    random proportions normalized so Σ R_i == ``total_min_gpu`` regardless of
+    ``n``, keeping every size schedulable under G_total = 1.
+    """
+    if n < 1:
+        raise ValueError(f"fleet size must be >= 1, got {n}")
+    rng = np.random.default_rng(seed)
+    mins = rng.uniform(0.5, 1.5, n)
+    mins = total_min_gpu * mins / mins.sum()
+    return Fleet(
+        names=tuple(f"agent_{i:03d}" for i in range(n)),
+        model_size_mb=jnp.asarray(rng.uniform(250.0, 4000.0, n), jnp.float32),
+        base_throughput=jnp.asarray(rng.uniform(20.0, 120.0, n), jnp.float32),
+        min_gpu=jnp.asarray(mins, jnp.float32),
+        priority=jnp.asarray(rng.integers(1, 4, n), jnp.float32),
+    )
+
+
+def pad_fleet(fleet: Fleet, n_max: int) -> Fleet:
+    """Pad ``fleet`` to ``n_max`` slots with inert, masked-out agents.
+
+    Padding slots carry T=1 (keeps ``base_throughput > 0`` valid and all
+    divisions finite), R=0, P=1 and ``active=0``; every registered policy
+    hands them exactly g = 0 and the simulator's reductions skip them.
+    """
+    n = fleet.num_agents
+    if n_max < n:
+        raise ValueError(f"cannot pad fleet of {n} agents down to {n_max}")
+    if n_max == n:
+        return fleet
+    pad = n_max - n
+
+    def ext(a, fill):
+        return jnp.concatenate(
+            [jnp.asarray(a, jnp.float32), jnp.full((pad,), fill, jnp.float32)]
+        )
+
+    return Fleet(
+        names=fleet.names + tuple(f"_pad_{i}" for i in range(pad)),
+        model_size_mb=ext(fleet.model_size_mb, 0.0),
+        base_throughput=ext(fleet.base_throughput, 1.0),
+        min_gpu=ext(fleet.min_gpu, 0.0),
+        priority=ext(fleet.priority, 1.0),
+        active=ext(fleet.active, 0.0),
+    )
+
+
+def stack_fleets(fleets: Sequence[Fleet], n_max: int | None = None) -> Fleet:
+    """Pad ``fleets`` to a common width and stack each leaf on a new leading
+    fleet axis: every array becomes (F, N_max) and ``names`` collapse to
+    generic slot labels (per-fleet names differ, so they cannot be aux data
+    of one batched pytree).  The result vmaps directly over axis 0.
+    """
+    if not fleets:
+        raise ValueError("stack_fleets needs at least one fleet")
+    width = max(f.num_agents for f in fleets)
+    n_max = width if n_max is None else n_max
+    if n_max < width:
+        raise ValueError(f"n_max={n_max} < widest fleet ({width} agents)")
+    padded = [pad_fleet(f, n_max) for f in fleets]
+    stack = lambda field: jnp.stack([getattr(f, field) for f in padded])
+    return Fleet(
+        names=tuple(f"slot_{i:03d}" for i in range(n_max)),
+        model_size_mb=stack("model_size_mb"),
+        base_throughput=stack("base_throughput"),
+        min_gpu=stack("min_gpu"),
+        priority=stack("priority"),
+        active=stack("active"),
+    )
 
 
 # Paper §IV-A arrival rates (requests/second).

@@ -24,6 +24,13 @@ The registry is the single source of truth for dispatch: the simulator's
 ``lax.switch`` branches, the serving engine's per-tick dispatch, and the
 vmapped sweep grid (``core/sweep.py``) are all built from it, so adding a
 policy here makes it available everywhere with no other edits.
+
+Registry entries are **mask-aware**: ``fleet.active`` (the agent-validity
+mask, see ``core/agents.py``) gates every input, so padded slots contribute
+zero demand and receive exactly g = 0, and ``static_equal``/``round_robin``
+divide by the *traced* active-agent count rather than a Python int — the
+whole registry therefore vmaps over a batched fleet axis of heterogeneous
+(padded) fleet sizes.
 """
 from __future__ import annotations
 
@@ -72,9 +79,33 @@ def static_equal(num_agents: int, g_total: float = 1.0) -> jnp.ndarray:
     return jnp.full((num_agents,), g_total / num_agents, jnp.float32)
 
 
+def masked_static_equal(active: jnp.ndarray, g_total: float = 1.0) -> jnp.ndarray:
+    """``static_equal`` over the *traced* active-agent count: G_total/N_active
+    to each unmasked agent, 0 to padding.  Identical to ``static_equal`` when
+    the mask is all-ones; vmappable over a batched fleet axis."""
+    n_active = jnp.maximum(active.sum(), 1.0)
+    return (active * (g_total / n_active)).astype(jnp.float32)
+
+
 def round_robin(t: jnp.ndarray, num_agents: int, g_total: float = 1.0) -> jnp.ndarray:
     """Baseline: 100% of the GPU to agent (t mod N) — '100% sequential'."""
     return jax.nn.one_hot(jnp.mod(t, num_agents), num_agents, dtype=jnp.float32) * g_total
+
+
+def masked_round_robin(
+    t: jnp.ndarray, active: jnp.ndarray, g_total: float = 1.0
+) -> jnp.ndarray:
+    """``round_robin`` over active agents only: the full GPU goes to the
+    (t mod N_active)-th *unmasked* agent.  With an all-ones mask the active
+    ranks are 0..N-1 and this reduces exactly to ``round_robin``.
+
+    The rotation is integer arithmetic: a float32 mod would lose tick
+    precision past 2^24 and skip agents in a long-running engine.
+    """
+    n_active = jnp.maximum(active.sum().astype(jnp.int32), 1)
+    rank = (jnp.cumsum(active) - 1.0).astype(jnp.int32)  # rank among active
+    chosen = jnp.mod(jnp.asarray(t).astype(jnp.int32), n_active)
+    return (active * jnp.where(rank == chosen, g_total, 0.0)).astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +191,7 @@ def objective_descent(
     steps: int = 12,
     lr: float = 0.05,
     latency_cap: float = 1000.0,
+    active: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Directly optimize the paper's Eq. (2) by projected gradient.
 
@@ -168,21 +200,27 @@ def objective_descent(
     smooth queue dynamics; projection = clip to [R_i·busy, 1] then
     capacity-normalize.  Still O(N) per iteration, `steps` iterations —
     ~12x Algorithm 1's cost, far under the paper's 1 ms budget.
+
+    ``active`` masks out padded agents: their latency leaves the objective
+    mean and projection pins them at g = 0, so a padded fleet descends the
+    same trajectory as its unpadded original.
     """
-    busy = (queue + lam) > 0
+    mask = jnp.ones_like(queue) if active is None else active
+    busy = mask * (queue + lam) > 0
     floor = jnp.where(busy, min_gpu, 0.0)
+    n_active = jnp.maximum(mask.sum(), 1.0)
 
     def objective(g):
         capacity = g * base_throughput
-        served = jnp.minimum(capacity, queue + lam)
-        new_q = queue + lam - served
+        served = jnp.minimum(capacity, queue + lam) * mask
+        new_q = (queue + lam) * mask - served
         lat = jnp.minimum(new_q / jnp.maximum(capacity, 1e-6), latency_cap)
-        return alpha * lat.mean() - gamma * served.sum()
+        return alpha * (lat * mask).sum() / n_active - gamma * served.sum()
 
     grad_fn = jax.grad(objective)
 
     def project(g):
-        g = jnp.clip(g, floor, 1.0)
+        g = jnp.clip(g, floor, 1.0) * mask
         return _normalize_capacity(g, g_total)
 
     g0 = adaptive_allocation(lam, min_gpu, priority, g_total)
@@ -280,41 +318,54 @@ def policy_switch(
     return jax.lax.switch(policy_id, branches)
 
 
+# Every entry gates its inputs with ``fleet.active`` and hard-masks its
+# output, so padded slots contribute zero demand and receive exactly g = 0.
+
 @register_policy("static_equal")
 def _static_equal_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
-    return static_equal(fleet.num_agents, g_total)
+    return masked_static_equal(fleet.active, g_total)
 
 
 @register_policy("round_robin")
 def _round_robin_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
-    return round_robin(t, fleet.num_agents, g_total)
+    return masked_round_robin(t, fleet.active, g_total)
 
 
 @register_policy("adaptive")
 def _adaptive_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
-    return adaptive_allocation(lam_obs, fleet.min_gpu, fleet.priority, g_total)
+    m = fleet.active
+    return adaptive_allocation(lam_obs * m, fleet.min_gpu * m, fleet.priority, g_total) * m
 
 
 @register_policy("water_filling")
 def _water_filling_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
-    return water_filling(queue, lam_obs, fleet.base_throughput, fleet.min_gpu, g_total)
+    m = fleet.active
+    return water_filling(
+        queue * m, lam_obs * m, fleet.base_throughput, fleet.min_gpu * m, g_total
+    ) * m
 
 
 @register_policy("predictive")
 def _predictive_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
-    return predictive_adaptive(lam_ema, fleet.min_gpu, fleet.priority, g_total)
+    m = fleet.active
+    return predictive_adaptive(lam_ema * m, fleet.min_gpu * m, fleet.priority, g_total) * m
 
 
 @register_policy("throughput_greedy")
 def _throughput_greedy_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
-    return throughput_greedy(queue, lam_obs, fleet.base_throughput, fleet.min_gpu, g_total)
+    m = fleet.active
+    return throughput_greedy(
+        queue * m, lam_obs * m, fleet.base_throughput, fleet.min_gpu * m, g_total
+    ) * m
 
 
 @register_policy("objective_descent")
 def _objective_descent_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    m = fleet.active
     return objective_descent(
-        queue, lam_obs, fleet.base_throughput, fleet.min_gpu, fleet.priority, g_total
-    )
+        queue * m, lam_obs * m, fleet.base_throughput, fleet.min_gpu * m,
+        fleet.priority, g_total, active=m,
+    ) * m
 
 
 def __getattr__(attr: str):

@@ -15,8 +15,12 @@ Semantics reconstructed from the paper (DESIGN.md §6):
   across policies, as in Table II.
 
 The whole run is one ``lax.scan``; policies are selected with ``lax.switch``
-built from the allocator's policy registry, so a (policies × workloads)
-sweep can be ``vmap``-ed — see ``core/sweep.py`` for the grid runner.
+built from the allocator's policy registry, and ``Fleet`` is a registered
+pytree, so a (fleets × policies × workloads) sweep is plain nested ``vmap``
+— see ``core/sweep.py`` for the grid runner.  Padded fleets are first-class:
+arrivals are gated by ``fleet.active`` and every metric reduction is
+mask-weighted, so a padded fleet reports the same numbers as its unpadded
+original.
 """
 from __future__ import annotations
 
@@ -92,12 +96,15 @@ def simulate_core(
     config: SimConfig,
     policy_names: Sequence[str] | None = None,
 ) -> SimTrace:
-    """Pure scan body — jit/vmap-able over ``policy_id`` and ``arrivals``.
+    """Pure scan body — jit/vmap-able over ``policy_id``, ``arrivals`` and
+    the ``fleet`` pytree (including a batched fleet axis).
 
     The EMA carry is seeded with the first observation; the update is skipped
-    at t=0 so that observation is not applied twice.
+    at t=0 so that observation is not applied twice.  Arrivals are gated by
+    ``fleet.active`` so padding slots never accumulate queue.
     """
     names = alloc.policy_names() if policy_names is None else tuple(policy_names)
+    arrivals = arrivals * fleet.active
 
     def step(carry, inp):
         queue, lam_ema = carry
@@ -123,17 +130,9 @@ def simulate_core(
     return SimTrace(g, served, queue, latency, arrivals)
 
 
-@functools.partial(jax.jit, static_argnames=("fleet_static", "config", "policy_names"))
-def _simulate_jit(
-    policy_id: jnp.ndarray,
-    arrivals: jnp.ndarray,
-    fleet_arrays: tuple,
-    fleet_static: tuple,
-    config: SimConfig,
-    policy_names: tuple,
-) -> SimTrace:
-    fleet = Fleet(fleet_static, *fleet_arrays)
-    return simulate_core(policy_id, arrivals, fleet, config, policy_names)
+# ``Fleet`` is a registered pytree (names are static aux data), so it passes
+# straight through jit — no array/static plumbing.
+_simulate_jit = jax.jit(simulate_core, static_argnames=("config", "policy_names"))
 
 
 def simulate(
@@ -144,9 +143,8 @@ def simulate(
 ) -> SimTrace:
     """Run one registered policy over an (S, N) arrival matrix."""
     fleet.validate()
-    arrays = (fleet.model_size_mb, fleet.base_throughput, fleet.min_gpu, fleet.priority)
     return _simulate_jit(
-        jnp.asarray(alloc.policy_id(policy)), arrivals, arrays, fleet.names, config,
+        jnp.asarray(alloc.policy_id(policy)), arrivals, fleet, config,
         alloc.policy_names(),
     )
 
@@ -163,32 +161,48 @@ METRIC_NAMES = (
 )
 
 
-def trace_metrics(trace: SimTrace) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+def trace_metrics(
+    trace: SimTrace, active: jnp.ndarray | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Table II reductions for one trace, jit/vmap-safe.
 
     Returns (metric vector in METRIC_NAMES order, per-agent mean latency,
     per-agent mean throughput).  The single definition behind both
     ``summarize`` and the sweep grid.
+
+    ``active`` is the fleet's validity mask: per-agent means/stds weight by
+    it, so padded slots (latency 0, throughput 0) never dilute the metrics.
+    With the default all-ones mask this is exactly the unweighted reduction.
     """
+    m = jnp.ones(trace.latency.shape[-1]) if active is None else active
+    n_active = jnp.maximum(m.sum(), 1.0)
+    mmean = lambda x: (x * m).sum() / n_active  # masked mean over agents
     per_lat = trace.latency.mean(axis=0)
     per_tput = trace.served.mean(axis=0)
     # Unclipped long-run latency: mean backlog over long-run service rate.
     longrun_rate = jnp.maximum(per_tput, _EPS)
-    littles = (trace.queue.mean(axis=0) / longrun_rate).mean()
+    littles = mmean(trace.queue.mean(axis=0) / longrun_rate)
+    lat_mean = mmean(per_lat)
+    lat_std = jnp.sqrt(mmean((per_lat - lat_mean) ** 2))
     vec = jnp.stack([
-        per_lat.mean(),
-        per_lat.std(),
+        lat_mean,
+        lat_std,
         per_tput.sum(),
         trace.allocation.sum(axis=1).mean(),
-        trace.queue.mean(),
+        mmean(trace.queue.mean(axis=0)),
         littles,
     ])
     return vec, per_lat, per_tput
 
 
-def summarize(policy: str, trace: SimTrace, config: SimConfig = SimConfig()) -> SimSummary:
-    """Table II metrics from a trace."""
-    vec, per_agent_lat, per_agent_tput = trace_metrics(trace)
+def summarize(
+    policy: str,
+    trace: SimTrace,
+    config: SimConfig = SimConfig(),
+    active: jnp.ndarray | None = None,
+) -> SimSummary:
+    """Table II metrics from a trace (``active`` masks padded agents)."""
+    vec, per_agent_lat, per_agent_tput = trace_metrics(trace, active)
     duration_s = trace.served.shape[0]
     cost = config.num_gpus * duration_s / 3600.0 * config.price_per_hour
     m = dict(zip(METRIC_NAMES, (float(x) for x in vec)))
@@ -212,4 +226,6 @@ def run_policy(
     fleet: Fleet,
     config: SimConfig = SimConfig(),
 ) -> SimSummary:
-    return summarize(policy, simulate(policy, arrivals, fleet, config), config)
+    return summarize(
+        policy, simulate(policy, arrivals, fleet, config), config, fleet.active
+    )

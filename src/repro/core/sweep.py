@@ -1,15 +1,33 @@
-"""Vmapped (policy × workload) sweep grid — the evaluation surface.
+"""Vmapped (fleet × policy × workload) sweep grids — the evaluation surface.
 
 The paper's claim (Table II / Fig. 2) is comparative: adaptive vs baselines
 across workloads.  This module evaluates the *entire* policy registry
-against a scenario library in ONE jitted call:
+against a scenario library in ONE jitted call, and — because ``Fleet`` is a
+registered pytree with an agent-validity mask (``core/agents.py``) — scales
+that grid along a third, batched **fleet axis** of heterogeneous fleet
+sizes:
 
-    sweep(fleet, scenario_library(rates))  ->  SweepResult
+    sweep(fleet, scenario_library(rates))          ->  SweepResult (P, W)
+    sweep_fleets([fleet_4, ..., fleet_256])        ->  SweepResult (F, P, W)
 
-Internally ``jax.vmap`` runs over the policy-id axis and, nested, over the
-stacked arrival matrices; per-cell Table II metrics are reduced inside the
-jit so the host only materializes a small (P, W, M) grid (plus full traces
-when ``keep_traces=True``).  Adding a policy to the allocator registry or a
+``sweep`` nests ``vmap(policy) ∘ vmap(workload)`` over ``simulate_core``;
+``sweep_fleets`` pads every fleet to a common width, stacks them
+(``stack_fleets``), builds one matched, padded scenario column per fleet
+(``fleet_scenario_library``), and adds ``vmap(fleet)`` outermost.  Padded
+slots contribute zero demand, receive exactly g = 0 from every registered
+policy, and are excluded from all metric reductions, so each row of the
+batched grid matches the per-fleet unbatched ``sweep`` within float
+tolerance.
+
+The batched grid is **device-sharded**: the fleet axis is laid out across
+``jax.devices()`` with a 1D mesh + ``NamedSharding`` (the
+``launch/mesh.py`` / ``distributed/sharding.py`` conventions: non-divisible
+axes fall back to replication), producing identical metrics on a single
+device and near-linear scaling on many.
+
+Per-cell Table II metrics are reduced inside the jit so the host only
+materializes a small (…, P, W, M) grid (plus full traces when
+``keep_traces=True``).  Adding a policy to the allocator registry or a
 scenario to the library grows the grid with no other edits.
 """
 from __future__ import annotations
@@ -21,10 +39,11 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import allocator as alloc
 from repro.core import workload
-from repro.core.agents import Fleet
+from repro.core.agents import Fleet, stack_fleets
 from repro.core.simulator import (
     METRIC_NAMES,
     SimConfig,
@@ -78,9 +97,42 @@ def scenario_library(
     )
 
 
+def fleet_scenario_library(
+    rate_vectors: Sequence[Sequence[float] | jnp.ndarray],
+    n_max: int,
+    num_steps: int = 100,
+    seed: int = 0,
+) -> tuple[tuple[str, ...], jnp.ndarray]:
+    """Matched per-fleet scenario columns, padded to a common agent width.
+
+    Each rate vector gets the standard library generated *at its own size*
+    (so stochastic draws match what the unbatched ``scenario_library`` would
+    produce for that fleet) and is then zero-padded to ``n_max`` agents.
+    Returns ``(scenario_names, arrivals)`` with arrivals of shape
+    (F, W, S, n_max) — the workload block of one batched fleet sweep.
+    """
+    names: tuple[str, ...] | None = None
+    blocks = []
+    for rates in rate_vectors:
+        lib = scenario_library(rates, num_steps, seed)
+        lib_names = tuple(s.name for s in lib)
+        if names is None:
+            names = lib_names
+        elif names != lib_names:
+            raise ValueError("scenario libraries diverged across fleets")
+        stacked = np.stack([np.asarray(s.arrivals, np.float32) for s in lib])
+        pad = n_max - stacked.shape[-1]
+        if pad < 0:
+            raise ValueError(
+                f"rate vector wider ({stacked.shape[-1]}) than n_max={n_max}"
+            )
+        blocks.append(np.pad(stacked, ((0, 0), (0, 0), (0, pad))))
+    return names, jnp.asarray(np.stack(blocks))
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepSummary:
-    """Flat Table-II-style rows, one per (policy, scenario) cell."""
+    """Flat Table-II-style rows, one per (fleet,) policy, scenario cell."""
 
     columns: tuple[str, ...]
     rows: tuple[tuple, ...]
@@ -94,46 +146,75 @@ class SweepSummary:
         return out
 
     def best(self, metric: str = "avg_latency", minimize: bool = True) -> dict[str, str]:
-        """Winning policy per scenario under one metric."""
+        """Winning policy per scenario (per fleet/scenario when the table
+        has a fleet axis) under one metric.
+
+        Comparisons are strict, so exact ties are stable: the first row in
+        table order (= policy-registry order) keeps the win in both the
+        minimize and maximize directions.
+        """
         mi = self.columns.index(metric)
         si = self.columns.index("scenario")
         pi = self.columns.index("policy")
+        fi = self.columns.index("fleet") if "fleet" in self.columns else None
         winners: dict[str, tuple[str, float]] = {}
         for row in self.rows:
-            scen, pol, val = row[si], row[pi], row[mi]
-            if scen not in winners or (val < winners[scen][1]) == minimize:
-                winners[scen] = (pol, val)
-        return {scen: pol for scen, (pol, _) in winners.items()}
+            key = row[si] if fi is None else f"{row[fi]}/{row[si]}"
+            val = row[mi]
+            if key not in winners:
+                winners[key] = (row[pi], val)
+                continue
+            better = val < winners[key][1] if minimize else val > winners[key][1]
+            if better:
+                winners[key] = (row[pi], val)
+        return {key: pol for key, (pol, _) in winners.items()}
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """Raw grids from one sweep; axes are (policy, scenario[, agent])."""
+    """Raw grids from one sweep; axes are ([fleet,] policy, scenario[, agent]).
+
+    ``fleet_names`` is None for a plain 2-axis ``sweep``; when set (the
+    ``sweep_fleets`` path) every grid carries a leading fleet axis.
+    """
 
     policy_names: tuple[str, ...]
     scenario_names: tuple[str, ...]
-    metrics: np.ndarray               # (P, W, len(METRIC_NAMES)) float32
-    per_agent_latency: np.ndarray     # (P, W, N)
-    per_agent_throughput: np.ndarray  # (P, W, N)
+    metrics: np.ndarray               # ([F,] P, W, len(METRIC_NAMES)) float32
+    per_agent_latency: np.ndarray     # ([F,] P, W, N)
+    per_agent_throughput: np.ndarray  # ([F,] P, W, N)
     cost: float                       # provisioned $, identical across cells
     config: SimConfig
-    traces: SimTrace | None = None    # leaves (P, W, S, N) when kept
+    traces: SimTrace | None = None    # leaves ([F,] P, W, S, N) when kept
+    fleet_names: tuple[str, ...] | None = None
 
     def metric(self, name: str) -> np.ndarray:
         return self.metrics[..., METRIC_NAMES.index(name)]
 
-    def summary(self, policy: str, scenario: str) -> SimSummary:
-        """One cell as a ``SimSummary`` — same fields as ``run_policy``."""
+    def _cell_index(self, policy: str, scenario: str, fleet: str | None):
         p = self.policy_names.index(policy)
         w = self.scenario_names.index(scenario)
-        m = dict(zip(METRIC_NAMES, (float(x) for x in self.metrics[p, w])))
+        if self.fleet_names is None:
+            if fleet is not None:
+                raise ValueError("this sweep has no fleet axis")
+            return (p, w)
+        if fleet is None:
+            raise ValueError(f"fleet axis present; pick one of {self.fleet_names}")
+        return (self.fleet_names.index(fleet), p, w)
+
+    def summary(
+        self, policy: str, scenario: str, fleet: str | None = None
+    ) -> SimSummary:
+        """One cell as a ``SimSummary`` — same fields as ``run_policy``."""
+        idx = self._cell_index(policy, scenario, fleet)
+        m = dict(zip(METRIC_NAMES, (float(x) for x in self.metrics[idx])))
         return SimSummary(
             policy=policy,
             avg_latency=m["avg_latency"],
             latency_std=m["latency_std"],
-            per_agent_latency=tuple(float(x) for x in self.per_agent_latency[p, w]),
+            per_agent_latency=tuple(float(x) for x in self.per_agent_latency[idx]),
             total_throughput=m["total_throughput"],
-            per_agent_throughput=tuple(float(x) for x in self.per_agent_throughput[p, w]),
+            per_agent_throughput=tuple(float(x) for x in self.per_agent_throughput[idx]),
             cost=self.cost,
             gpu_utilization=m["gpu_utilization"],
             littles_law_latency=m["littles_law_latency"],
@@ -141,40 +222,87 @@ class SweepResult:
         )
 
     def table(self) -> SweepSummary:
-        columns = ("policy", "scenario") + METRIC_NAMES + ("cost",)
+        base = ("policy", "scenario") + METRIC_NAMES + ("cost",)
+        # One loop serves both shapes: a fleetless grid is a single
+        # anonymous fleet whose prefix column is dropped.
+        has_fleet = self.fleet_names is not None
+        fleet_axis = self.fleet_names if has_fleet else (None,)
         rows = []
-        for p, pol in enumerate(self.policy_names):
-            for w, scen in enumerate(self.scenario_names):
-                rows.append(
-                    (pol, scen) + tuple(float(x) for x in self.metrics[p, w])
-                    + (self.cost,)
-                )
+        for f, fl in enumerate(fleet_axis):
+            grid = self.metrics[f] if has_fleet else self.metrics
+            for p, pol in enumerate(self.policy_names):
+                for w, scen in enumerate(self.scenario_names):
+                    prefix = (fl, pol, scen) if has_fleet else (pol, scen)
+                    rows.append(
+                        prefix + tuple(float(x) for x in grid[p, w]) + (self.cost,)
+                    )
+        columns = (("fleet",) + base) if has_fleet else base
         return SweepSummary(columns=columns, rows=tuple(rows))
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("fleet_static", "config", "reg_names", "keep_traces"),
-)
+@functools.partial(jax.jit, static_argnames=("config", "reg_names", "keep_traces"))
 def _sweep_jit(
     pids: jnp.ndarray,
     arrivals: jnp.ndarray,
-    fleet_arrays: tuple,
-    fleet_static: tuple,
+    fleet: Fleet,
     config: SimConfig,
     reg_names: tuple,
     keep_traces: bool,
 ):
-    fleet = Fleet(fleet_static, *fleet_arrays)
-
     def cell(pid, arr):
         trace = simulate_core(pid, arr, fleet, config, reg_names)
-        vec, per_lat, per_tput = trace_metrics(trace)
+        vec, per_lat, per_tput = trace_metrics(trace, fleet.active)
         if keep_traces:
             return vec, per_lat, per_tput, trace
         return vec, per_lat, per_tput
 
     return jax.vmap(lambda pid: jax.vmap(lambda a: cell(pid, a))(arrivals))(pids)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "reg_names", "keep_traces"))
+def _fleet_sweep_jit(
+    pids: jnp.ndarray,
+    arrivals: jnp.ndarray,  # (F, W, S, N)
+    fleet: Fleet,           # leaves (F, N)
+    config: SimConfig,
+    reg_names: tuple,
+    keep_traces: bool,
+):
+    def cell(fl, pid, arr):
+        trace = simulate_core(pid, arr, fl, config, reg_names)
+        vec, per_lat, per_tput = trace_metrics(trace, fl.active)
+        if keep_traces:
+            return vec, per_lat, per_tput, trace
+        return vec, per_lat, per_tput
+
+    over_scen = jax.vmap(cell, in_axes=(None, None, 0))
+    over_pol = jax.vmap(over_scen, in_axes=(None, 0, None))
+    over_fleet = jax.vmap(over_pol, in_axes=(0, None, 0))
+    return over_fleet(fleet, pids, arrivals)
+
+
+def grid_mesh() -> jax.sharding.Mesh:
+    """All live devices as a 1D ``grid`` mesh (cf. ``launch.mesh.make_host_mesh``)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("grid",))
+
+
+def _shard_fleet_axis(stacked: Fleet, arrivals: jnp.ndarray, mesh=None):
+    """Lay the fleet axis out across the mesh's ``grid`` axis.
+
+    Follows ``distributed/sharding.py``'s divisibility convention: when the
+    fleet count does not divide the device count the axis is replicated
+    instead, so the sharded path always runs (and on one device is the
+    identity placement — metrics are bit-identical to the unsharded path).
+    """
+    mesh = grid_mesh() if mesh is None else mesh
+    f = arrivals.shape[0]
+    if f % mesh.shape["grid"] == 0:
+        spec = PartitionSpec("grid")
+    else:
+        spec = PartitionSpec()
+    sharding = NamedSharding(mesh, spec)
+    return jax.device_put(stacked, sharding), jax.device_put(arrivals, sharding)
 
 
 def sweep(
@@ -188,8 +316,8 @@ def sweep(
 
     All scenarios must share one (S, N) shape.  The grid is a single jitted
     ``vmap(policy) ∘ vmap(workload)`` call over ``simulate_core`` (cached
-    across calls with the same fleet/config/registry); the cost column is
-    computed host-side (it is allocation-independent).
+    across calls with the same fleet structure/config/registry); the cost
+    column is computed host-side (it is allocation-independent).
     """
     fleet.validate()
     reg_names = alloc.policy_names()
@@ -199,10 +327,7 @@ def sweep(
         [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
     )  # (W, S, N)
 
-    fleet_arrays = (fleet.model_size_mb, fleet.base_throughput, fleet.min_gpu, fleet.priority)
-    out = _sweep_jit(
-        pids, arrivals, fleet_arrays, fleet.names, config, reg_names, keep_traces
-    )
+    out = _sweep_jit(pids, arrivals, fleet, config, reg_names, keep_traces)
     metrics, per_lat, per_tput = (np.asarray(x) for x in out[:3])
     traces = out[3] if keep_traces else None
 
@@ -217,4 +342,79 @@ def sweep(
         cost=float(cost),
         config=config,
         traces=traces,
+    )
+
+
+def sweep_fleets(
+    fleets: Sequence[Fleet],
+    rate_vectors: Sequence[Sequence[float] | jnp.ndarray] | None = None,
+    num_steps: int = 100,
+    seed: int = 0,
+    config: SimConfig = SimConfig(),
+    policies: Sequence[str] | None = None,
+    fleet_names: Sequence[str] | None = None,
+    keep_traces: bool = False,
+    shard: bool = True,
+) -> SweepResult:
+    """One jitted (fleet × policy × scenario) grid over heterogeneous fleets.
+
+    Fleets are padded to the widest member and stacked into a single batched
+    ``Fleet`` pytree; each fleet gets a matched scenario column generated at
+    its true size from its own rate vector (default:
+    ``workload.synthetic_rates`` at the paper's aggregate load, so total
+    demand is held constant while the agent count scales).  ``shard=True``
+    lays the fleet axis across ``jax.devices()`` (identical metrics on one
+    device); the per-fleet rows match the unbatched ``sweep`` within float
+    tolerance.
+    """
+    fleets = list(fleets)
+    if not fleets:
+        raise ValueError("sweep_fleets needs at least one fleet")
+    for f in fleets:
+        f.validate()
+    if rate_vectors is None:
+        rate_vectors = [
+            workload.synthetic_rates(f.num_agents, seed=seed + i)
+            for i, f in enumerate(fleets)
+        ]
+    if len(rate_vectors) != len(fleets):
+        raise ValueError("need one rate vector per fleet")
+    for i, (f, r) in enumerate(zip(fleets, rate_vectors)):
+        width = np.asarray(r).shape[-1]
+        if width != f.num_agents:
+            raise ValueError(
+                f"rate vector {i} has {width} agents but fleet {i} has "
+                f"{f.num_agents}; a mismatch would silently zero real demand"
+            )
+    if fleet_names is None:
+        fleet_names = tuple(f"fleet{i}_n{f.num_agents}" for i, f in enumerate(fleets))
+    else:
+        fleet_names = tuple(fleet_names)
+
+    stacked = stack_fleets(fleets)
+    scen_names, arrivals = fleet_scenario_library(
+        rate_vectors, stacked.num_agents, num_steps, seed
+    )  # (F, W, S, N_max)
+    if shard:
+        stacked, arrivals = _shard_fleet_axis(stacked, arrivals)
+
+    reg_names = alloc.policy_names()
+    names = reg_names if policies is None else tuple(policies)
+    pids = jnp.asarray([alloc.policy_id(p) for p in names])
+
+    out = _fleet_sweep_jit(pids, arrivals, stacked, config, reg_names, keep_traces)
+    metrics, per_lat, per_tput = (np.asarray(x) for x in out[:3])
+    traces = out[3] if keep_traces else None
+
+    cost = config.num_gpus * num_steps / 3600.0 * config.price_per_hour
+    return SweepResult(
+        policy_names=names,
+        scenario_names=scen_names,
+        metrics=metrics,
+        per_agent_latency=per_lat,
+        per_agent_throughput=per_tput,
+        cost=float(cost),
+        config=config,
+        traces=traces,
+        fleet_names=fleet_names,
     )

@@ -17,11 +17,36 @@ beyond-paper processes feed the sweep grid (``core/sweep.py``):
 
 Every generator returns an (S, N) float32 array of arrivals per step and is
 deterministic given its PRNG key, so sweeps are exactly reproducible.
+
+``synthetic_rates`` generates the *base rate vector itself* for arbitrary
+fleet sizes: random per-agent proportions of a fixed aggregate load
+(default: the paper's 190 rps), so agent-count scaling sweeps
+(``core/sweep.py::sweep_fleets``) hold total demand constant while N grows.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# Σ of the paper's §IV-A arrival rates (80+40+45+25 rps).
+PAPER_TOTAL_RATE = 190.0
+
+
+def synthetic_rates(
+    num_agents: int, seed: int = 0, total_rate: float = PAPER_TOTAL_RATE
+) -> jnp.ndarray:
+    """A reproducible per-agent rate vector summing to ``total_rate``.
+
+    Proportions are drawn uniformly in [0.5, 1.5] and normalized, bounding
+    any agent's share within 3x of any other's — heterogeneous but never
+    degenerate, at any fleet size.
+    """
+    if num_agents < 1:
+        raise ValueError(f"num_agents must be >= 1, got {num_agents}")
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 1.5, num_agents)
+    return jnp.asarray(total_rate * w / w.sum(), jnp.float32)
 
 
 def constant(rates: jnp.ndarray, num_steps: int) -> jnp.ndarray:

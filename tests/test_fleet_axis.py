@@ -1,0 +1,272 @@
+"""Fleet-as-a-pytree + fleet-axis sweep tests.
+
+Covers the agent-count-scaling acceptance criteria: ``Fleet`` flows through
+jit/vmap as a pytree, padded slots get exactly g = 0 from every registered
+policy, a batched (fleet × policy × scenario) sweep over heterogeneous
+fleet sizes matches the per-fleet unbatched ``sweep()`` within float
+tolerance, and the device-sharded grid path is identical to the unsharded
+one on a single device.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import allocator as alloc
+from repro.core import workload
+from repro.core.agents import (
+    Fleet,
+    pad_fleet,
+    paper_fleet,
+    scale_fleet,
+    stack_fleets,
+    synthetic_fleet,
+)
+from repro.core.simulator import run_policy, simulate
+from repro.core.sweep import (
+    fleet_scenario_library,
+    scenario_library,
+    sweep,
+    sweep_fleets,
+)
+
+FLEET_SIZES = (4, 8, 16, 64)
+NUM_STEPS = 20
+SEED = 0
+
+
+def _fleets():
+    return [
+        scale_fleet(paper_fleet(), 4),
+        synthetic_fleet(8, seed=8),
+        synthetic_fleet(16, seed=16),
+        synthetic_fleet(64, seed=64),
+    ]
+
+
+@pytest.fixture(scope="module")
+def batched():
+    """One batched sweep over all fleet sizes + the matching rate vectors."""
+    fleets = _fleets()
+    rates = [workload.synthetic_rates(f.num_agents, seed=SEED + i)
+             for i, f in enumerate(fleets)]
+    res = sweep_fleets(fleets, rates, num_steps=NUM_STEPS, seed=SEED)
+    return fleets, rates, res
+
+
+class TestFleetPytree:
+    def test_flatten_roundtrip(self):
+        fleet = paper_fleet()
+        leaves, treedef = jax.tree_util.tree_flatten(fleet)
+        assert len(leaves) == 5  # four profiles + the validity mask
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert back.names == fleet.names
+        np.testing.assert_array_equal(np.asarray(back.active), 1.0)
+
+    def test_jit_passthrough(self):
+        fleet = paper_fleet()
+        total_min = jax.jit(lambda f: f.min_gpu.sum())(fleet)
+        assert abs(float(total_min) - 1.0) < 1e-6
+
+    def test_vmap_over_stacked_fleet(self):
+        stacked = stack_fleets([synthetic_fleet(4, seed=1), synthetic_fleet(6, seed=2)])
+        n_active = jax.vmap(lambda f: f.num_active)(stacked)
+        np.testing.assert_allclose(np.asarray(n_active), [4.0, 6.0])
+
+    def test_default_mask_is_all_ones(self):
+        fleet = paper_fleet()
+        np.testing.assert_array_equal(np.asarray(fleet.active), np.ones(4))
+        assert float(fleet.num_active) == 4.0
+
+
+class TestFleetGenerators:
+    def test_synthetic_fleet_reproducible_and_valid(self):
+        a, b = synthetic_fleet(12, seed=3), synthetic_fleet(12, seed=3)
+        np.testing.assert_array_equal(np.asarray(a.min_gpu), np.asarray(b.min_gpu))
+        a.validate()
+        assert a.num_agents == 12
+        assert float(a.min_gpu.sum()) < 1.0  # schedulable under G_total=1
+
+    def test_scale_fleet_preserves_total_min_gpu(self):
+        base = paper_fleet()
+        # Non-multiples of the base size must preserve Σ min_gpu too.
+        for n in (4, 5, 8, 13, 32, 100):
+            big = scale_fleet(base, n)
+            big.validate()
+            assert big.num_agents == n
+            np.testing.assert_allclose(
+                float(big.min_gpu.sum()), float(base.min_gpu.sum()), rtol=1e-5
+            )
+
+    def test_pad_fleet_masks_padding(self):
+        padded = pad_fleet(paper_fleet(), 10)
+        padded.validate()
+        assert padded.num_agents == 10
+        assert float(padded.num_active) == 4.0
+        np.testing.assert_array_equal(np.asarray(padded.active[4:]), 0.0)
+        assert (np.asarray(padded.base_throughput) > 0).all()
+
+    def test_stack_fleets_pads_to_widest(self):
+        stacked = stack_fleets([synthetic_fleet(3, seed=0), synthetic_fleet(7, seed=1)])
+        assert stacked.num_agents == 7
+        assert np.asarray(stacked.min_gpu).shape == (2, 7)
+        np.testing.assert_allclose(np.asarray(stacked.active).sum(axis=1), [3.0, 7.0])
+
+    def test_pad_below_current_size_raises(self):
+        with pytest.raises(ValueError):
+            pad_fleet(paper_fleet(), 2)
+
+    def test_scale_fleet_rejects_padded_input(self):
+        with pytest.raises(ValueError, match="unpadded"):
+            scale_fleet(pad_fleet(paper_fleet(), 8), 16)
+
+
+class TestPaddedPolicies:
+    """Padded slots must receive exactly g = 0 from every registered policy
+    under randomized load, and the active slots must still respect the
+    capacity invariants."""
+
+    @pytest.mark.parametrize("policy", alloc.policy_names())
+    def test_padding_gets_exactly_zero(self, policy):
+        for seed in range(3):
+            rng = np.random.default_rng(seed)
+            n, n_pad = 5, 4
+            fleet = pad_fleet(synthetic_fleet(n, seed=seed), n + n_pad)
+            lam = jnp.asarray(
+                np.concatenate([rng.uniform(0, 200, n), rng.uniform(0, 200, n_pad)]),
+                jnp.float32,
+            )  # even nonzero padded observations must be ignored
+            q = jnp.asarray(
+                np.concatenate([rng.uniform(0, 500, n), rng.uniform(0, 500, n_pad)]),
+                jnp.float32,
+            )
+            g = np.asarray(
+                alloc.dispatch(policy, jnp.asarray(int(rng.integers(0, 7))),
+                               lam, lam, q, fleet, 1.0)
+            )
+            assert (g[n:] == 0.0).all(), (policy, seed, g[n:])
+            assert (g >= -1e-6).all()
+            assert g.sum() <= 1.0 + 1e-4
+
+    @pytest.mark.parametrize("policy", alloc.policy_names())
+    def test_padded_simulation_matches_unpadded(self, policy):
+        fleet = paper_fleet()
+        rates = jnp.asarray([80.0, 40.0, 45.0, 25.0], jnp.float32)
+        arr = workload.constant(rates, 50)
+        padded = pad_fleet(fleet, 16)
+        arr_p = jnp.pad(arr, ((0, 0), (0, 12)))
+        a = run_policy(policy, arr, fleet)
+        b = run_policy(policy, arr_p, padded)
+        g = np.asarray(simulate(policy, arr_p, padded).allocation)
+        assert (g[:, 4:] == 0.0).all(), policy
+        np.testing.assert_allclose(a.avg_latency, b.avg_latency, rtol=2e-3, atol=1e-2)
+        np.testing.assert_allclose(a.latency_std, b.latency_std, rtol=2e-3, atol=1e-2)
+        np.testing.assert_allclose(
+            a.total_throughput, b.total_throughput, rtol=2e-3, atol=1e-2
+        )
+
+    def test_round_robin_exact_at_large_tick(self):
+        """The active-rank rotation must be integer arithmetic: a float32
+        mod would round ticks past 2^24 and skip/repeat agents."""
+        fleet = pad_fleet(synthetic_fleet(3, seed=0), 8)
+        zeros = jnp.zeros(8, jnp.float32)
+        big = 2**24 + 1  # odd, unrepresentable in float32
+        g = np.asarray(
+            alloc.dispatch("round_robin", jnp.asarray(big), zeros, zeros, zeros,
+                           fleet, 1.0)
+        )
+        assert int(g.argmax()) == big % 3
+        assert g.sum() == 1.0
+
+    def test_round_robin_cycles_active_slots_only(self):
+        fleet = pad_fleet(synthetic_fleet(3, seed=0), 8)
+        zeros = jnp.zeros(8, jnp.float32)
+        hits = []
+        for t in range(6):
+            g = np.asarray(
+                alloc.dispatch("round_robin", jnp.asarray(t), zeros, zeros, zeros,
+                               fleet, 1.0)
+            )
+            assert g.sum() == 1.0
+            hits.append(int(g.argmax()))
+        assert hits == [0, 1, 2, 0, 1, 2]
+
+    def test_static_equal_divides_by_active_count(self):
+        fleet = pad_fleet(synthetic_fleet(5, seed=0), 12)
+        zeros = jnp.zeros(12, jnp.float32)
+        g = np.asarray(
+            alloc.dispatch("static_equal", jnp.asarray(0), zeros, zeros, zeros, fleet, 1.0)
+        )
+        np.testing.assert_allclose(g[:5], 0.2, rtol=1e-6)
+        assert (g[5:] == 0.0).all()
+
+
+class TestFleetSweep:
+    def test_grid_shape(self, batched):
+        fleets, _, res = batched
+        F, P, W = len(fleets), len(alloc.policy_names()), len(res.scenario_names)
+        assert res.metrics.shape[:3] == (F, P, W)
+        assert res.per_agent_latency.shape == (F, P, W, 64)
+        assert np.isfinite(res.metrics).all()
+        assert res.fleet_names == tuple(
+            f"fleet{i}_n{f.num_agents}" for i, f in enumerate(fleets)
+        )
+
+    def test_batched_matches_unbatched_per_fleet(self, batched):
+        """The acceptance criterion: every row of the padded/masked batched
+        grid reproduces the unbatched per-fleet sweep within float tolerance."""
+        fleets, rates, res = batched
+        for i, fleet in enumerate(fleets):
+            scen = scenario_library(rates[i], num_steps=NUM_STEPS, seed=SEED)
+            unbatched = sweep(fleet, scen)
+            np.testing.assert_allclose(
+                res.metrics[i], unbatched.metrics, rtol=2e-3, atol=5e-2,
+                err_msg=f"fleet {res.fleet_names[i]}",
+            )
+            n = fleet.num_agents
+            np.testing.assert_allclose(
+                res.per_agent_latency[i, :, :, :n], unbatched.per_agent_latency,
+                rtol=2e-3, atol=5e-2,
+            )
+            # padded agents serve nothing
+            assert (res.per_agent_throughput[i, :, :, n:] == 0.0).all()
+
+    def test_sharded_matches_unsharded(self, batched):
+        fleets, rates, res = batched
+        plain = sweep_fleets(fleets, rates, num_steps=NUM_STEPS, seed=SEED, shard=False)
+        np.testing.assert_array_equal(res.metrics, plain.metrics)
+        np.testing.assert_array_equal(res.per_agent_latency, plain.per_agent_latency)
+
+    def test_table_and_best_carry_fleet_axis(self, batched):
+        fleets, _, res = batched
+        table = res.table()
+        assert table.columns[0] == "fleet"
+        assert len(table.rows) == len(fleets) * len(res.policy_names) * len(res.scenario_names)
+        best = table.best("avg_latency")
+        assert set(best) == {
+            f"{fl}/{sc}" for fl in res.fleet_names for sc in res.scenario_names
+        }
+
+    def test_summary_requires_fleet_on_batched_grid(self, batched):
+        _, _, res = batched
+        with pytest.raises(ValueError):
+            res.summary("adaptive", "constant")
+        s = res.summary("adaptive", "constant", fleet=res.fleet_names[0])
+        assert np.isfinite(s.avg_latency)
+
+    def test_mismatched_rate_vector_raises(self):
+        fleets = [synthetic_fleet(4, seed=0), synthetic_fleet(8, seed=1)]
+        rates = [workload.synthetic_rates(4, seed=0), workload.synthetic_rates(8, seed=1)]
+        with pytest.raises(ValueError, match="rate vector"):
+            sweep_fleets(fleets, rates[::-1], num_steps=5)  # swapped pair
+
+    def test_fleet_scenario_library_matches_unbatched_generators(self):
+        rates = [workload.synthetic_rates(4, seed=0), workload.synthetic_rates(6, seed=1)]
+        names, arr = fleet_scenario_library(rates, n_max=6, num_steps=15, seed=3)
+        assert arr.shape == (2, len(names), 15, 6)
+        lib0 = scenario_library(rates[0], num_steps=15, seed=3)
+        for w, s in enumerate(lib0):
+            np.testing.assert_array_equal(
+                np.asarray(arr[0, w, :, :4]), np.asarray(s.arrivals), err_msg=s.name
+            )
+        np.testing.assert_array_equal(np.asarray(arr[0, :, :, 4:]), 0.0)

@@ -1,0 +1,93 @@
+"""Property tests for the policy-registry invariants (hypothesis-optional).
+
+Every registered policy, under randomized (lam, queue) and padded/masked
+fleets, must return
+
+* g >= 0 everywhere,
+* Σ g <= g_total,
+* exactly g = 0 on padded (masked-out) slots, and
+* the min-GPU floor for busy agents — unless capacity is saturated, in
+  which case Algorithm 1's proportional scale-down (lines 21-25) is allowed
+  to compress floors; baselines that ignore floors by design
+  (static_equal / round_robin) are exempt.
+
+The hypothesis-driven test skips cleanly when hypothesis is not installed
+(tests/conftest.py stubs it); the deterministic sweep below covers the same
+invariants with a fixed RNG either way.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import allocator as alloc
+from repro.core.agents import pad_fleet, synthetic_fleet
+
+# Policies that honor per-agent minimum guarantees; which agents count as
+# "busy" depends on the demand signal each policy actually reads.
+FLOOR_POLICIES = {
+    "adaptive": lambda lam, q: lam > 0,
+    "predictive": lambda lam, q: lam > 0,
+    "water_filling": lambda lam, q: (lam + q) > 0,
+    "throughput_greedy": lambda lam, q: (lam + q) > 0,
+    "objective_descent": lambda lam, q: (lam + q) > 0,
+}
+
+
+def _check_invariants(policy, fleet, lam, q, g_total, n_real):
+    g = np.asarray(
+        alloc.dispatch(policy, jnp.asarray(0), lam, lam, q, fleet, g_total)
+    )
+    assert not np.isnan(g).any(), policy
+    assert (g >= -1e-6).all(), (policy, g.min())
+    assert g.sum() <= g_total * (1 + 1e-4), (policy, g.sum())
+    assert (g[n_real:] == 0.0).all(), (policy, g[n_real:])
+    if policy in FLOOR_POLICIES:
+        busy = np.asarray(FLOOR_POLICIES[policy](np.asarray(lam), np.asarray(q)))
+        busy &= np.asarray(fleet.active) > 0
+        floor = np.asarray(fleet.min_gpu)
+        below = busy & (g < floor - 1e-5)
+        if below.any():
+            # Floors may only be compressed by the capacity normalization,
+            # i.e. when the whole budget is spent.
+            assert g.sum() >= g_total * (1 - 1e-3), (policy, g.sum(), g_total)
+
+
+def _run_case(n_real, n_pad, seed, g_total, lam_vals, q_vals):
+    fleet = pad_fleet(synthetic_fleet(n_real, seed=seed), n_real + n_pad)
+    lam = jnp.zeros(n_real + n_pad, jnp.float32).at[:n_real].set(
+        jnp.asarray(lam_vals[:n_real], jnp.float32)
+    )
+    q = jnp.zeros(n_real + n_pad, jnp.float32).at[:n_real].set(
+        jnp.asarray(q_vals[:n_real], jnp.float32)
+    )
+    for policy in alloc.policy_names():
+        _check_invariants(policy, fleet, lam, q, g_total, n_real)
+
+
+@hypothesis.given(
+    lam=st.lists(st.floats(0.0, 1e3), min_size=2, max_size=10),
+    queue=st.lists(st.floats(0.0, 1e4), min_size=2, max_size=10),
+    n_pad=st.integers(0, 6),
+    g_total=st.floats(0.5, 2.0),
+    seed=st.integers(0, 3),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_policy_invariants_property(lam, queue, n_pad, g_total, seed):
+    n_real = min(len(lam), len(queue))
+    _run_case(n_real, n_pad, seed, g_total, lam, queue)
+
+
+@pytest.mark.parametrize("n_real,n_pad", [(3, 0), (4, 4), (7, 9)])
+def test_policy_invariants_deterministic(n_real, n_pad):
+    """Hypothesis-free coverage of the same invariants, fixed RNG."""
+    rng = np.random.default_rng(n_real * 31 + n_pad)
+    for case in range(5):
+        lam = rng.uniform(0.0, 500.0, n_real)
+        q = rng.uniform(0.0, 2000.0, n_real)
+        if case == 3:
+            lam[:] = 0.0  # idle fleet: everything must be released or floored
+        if case == 4:
+            q[:] = 0.0
+        _run_case(n_real, n_pad, seed=case, g_total=1.0, lam_vals=lam, q_vals=q)

@@ -16,6 +16,7 @@ from repro.core.simulator import SimConfig, run_policy, simulate
 from repro.core.sweep import (
     METRIC_NAMES,
     Scenario,
+    SweepSummary,
     scenario_library,
     sweep,
 )
@@ -149,6 +150,46 @@ class TestSweepGrid:
         # the paper's headline: ~85% latency reduction at equal cost
         assert 1 - adaptive.avg_latency / rr.avg_latency > 0.84
         assert abs(adaptive.cost - rr.cost) < 1e-9
+
+
+class TestBestTieHandling:
+    """``SweepSummary.best`` must be strict and tie-stable: on an exact tie
+    the earliest row (policy-registry order) keeps the win, in both the
+    minimize and maximize directions."""
+
+    COLS = ("policy", "scenario", "score")
+
+    def _table(self, rows):
+        return SweepSummary(columns=self.COLS, rows=tuple(rows))
+
+    def test_minimize_prefers_strictly_smaller(self):
+        t = self._table([("a", "s", 3.0), ("b", "s", 1.0), ("c", "s", 2.0)])
+        assert t.best("score", minimize=True) == {"s": "b"}
+
+    def test_maximize_prefers_strictly_larger(self):
+        t = self._table([("a", "s", 1.0), ("b", "s", 3.0), ("c", "s", 2.0)])
+        assert t.best("score", minimize=False) == {"s": "b"}
+
+    def test_minimize_tie_keeps_first_row(self):
+        t = self._table([("a", "s", 1.0), ("b", "s", 1.0), ("c", "s", 2.0)])
+        assert t.best("score", minimize=True) == {"s": "a"}
+
+    def test_maximize_tie_keeps_first_row(self):
+        t = self._table([("a", "s", 2.0), ("b", "s", 2.0), ("c", "s", 1.0)])
+        assert t.best("score", minimize=False) == {"s": "a"}
+
+    def test_all_tied_keeps_first_row_both_directions(self):
+        t = self._table([("a", "s", 5.0), ("b", "s", 5.0), ("c", "s", 5.0)])
+        assert t.best("score", minimize=True) == {"s": "a"}
+        assert t.best("score", minimize=False) == {"s": "a"}
+
+    def test_fleet_axis_keys(self):
+        t = SweepSummary(
+            columns=("fleet",) + self.COLS,
+            rows=(("n4", "a", "s", 2.0), ("n4", "b", "s", 1.0),
+                  ("n8", "a", "s", 1.0), ("n8", "b", "s", 1.0)),
+        )
+        assert t.best("score", minimize=True) == {"n4/s": "b", "n8/s": "a"}
 
 
 class TestEmaSeeding:
