@@ -1,0 +1,40 @@
+"""Shared benchmark knobs.
+
+``REPRO_BENCH_SMOKE=1`` (or ``benchmarks.run --smoke``) switches every
+benchmark to a reduced configuration — fewer simulated steps, fewer timing
+reps, smaller fleets — so CI can execute the *entire* driver end-to-end on
+every push (artifacts included) without paying full-benchmark wall time.
+Numbers produced in smoke mode are for liveness, not for the paper tables.
+"""
+from __future__ import annotations
+
+import os
+
+
+def smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def steps(full: int, reduced: int | None = None) -> int:
+    """Simulated-step count: ``full`` normally, ``reduced`` (default
+    full//5, floor 10) in smoke mode."""
+    if not smoke():
+        return full
+    return reduced if reduced is not None else max(full // 5, 10)
+
+
+def reps(full: int, reduced: int = 1) -> int:
+    """Timing-loop repetitions: ``full`` normally, ``reduced`` in smoke."""
+    return reduced if smoke() else full
+
+
+def sizes(full: tuple, keep: int = 3) -> tuple:
+    """Size-scaling benchmarks keep only the ``keep`` smallest sizes in
+    smoke mode; the one truncation policy for every scaling curve."""
+    return full[:keep] if smoke() else full
+
+
+def out_dir(default: str = "experiments/paper") -> str:
+    """Artifact directory: liveness-only smoke numbers must never land in
+    the checked-in paper artifacts, whichever entry point ran the module."""
+    return "experiments/smoke" if smoke() else default

@@ -15,6 +15,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks import _smoke
 from repro.core import allocator as alloc
 from repro.core.agents import pad_fleet, synthetic_fleet
 from repro.core.allocator import adaptive_allocation
@@ -25,15 +26,17 @@ REPS = 200
 
 def _time(fn, *args) -> float:
     fn(*args).block_until_ready()  # warmup/compile
+    reps = _smoke.reps(REPS, 5)
     t0 = time.perf_counter()
-    for _ in range(REPS):
+    for _ in range(reps):
         fn(*args).block_until_ready()
-    return (time.perf_counter() - t0) / REPS * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(out_dir: str = "experiments/paper") -> list[str]:
+def run(out_dir: str | None = None) -> list[str]:
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
     raw, masked = {}, {}
-    for n in SIZES:
+    for n in _smoke.sizes(SIZES):
         key = jax.random.key(n)
         lam = jax.random.uniform(key, (n,), minval=1.0, maxval=100.0)
         mins = jnp.full((n,), 0.5 / n)
@@ -55,11 +58,13 @@ def run(out_dir: str = "experiments/paper") -> list[str]:
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "allocator_scaling.json"), "w") as fh:
         json.dump({"raw_us": raw, "masked_registry_us": masked}, fh, indent=1)
-    # sub-millisecond at paper scale; growth factor 4 -> 4096 agents
-    growth = raw[4096] / raw[4]
-    mgrowth = masked[4096] / masked[4]
+    # sub-millisecond at paper scale; growth factor smallest -> largest size
+    lo, hi = min(raw), max(raw)
+    growth = raw[hi] / raw[lo]
+    mgrowth = masked[hi] / masked[lo]
+    factor = hi // lo
     return [
-        f"scaling/alloc_n4,{raw[4]:.1f},sub_ms={raw[4] < 1000}",
-        f"scaling/alloc_n4096,{raw[4096]:.1f},growth_1024x_agents={growth:.1f}x",
-        f"scaling/alloc_masked_n4096,{masked[4096]:.1f},growth_1024x_agents={mgrowth:.1f}x",
+        f"scaling/alloc_n{lo},{raw[lo]:.1f},sub_ms={raw[lo] < 1000}",
+        f"scaling/alloc_n{hi},{raw[hi]:.1f},growth_{factor}x_agents={growth:.1f}x",
+        f"scaling/alloc_masked_n{hi},{masked[hi]:.1f},growth_{factor}x_agents={mgrowth:.1f}x",
     ]

@@ -8,14 +8,16 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import _smoke
 from repro.core import workload
 from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
 from repro.core.simulator import simulate, summarize
 
 
-def run(out_dir: str = "experiments/paper") -> list[str]:
+def run(out_dir: str | None = None) -> list[str]:
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
     fleet = paper_fleet()
-    arr = workload.constant(jnp.asarray(PAPER_ARRIVAL_RATES), 100)
+    arr = workload.constant(jnp.asarray(PAPER_ARRIVAL_RATES), _smoke.steps(100))
     data = {"agents": list(fleet.names)}
     scatter = []
     for policy in ("static_equal", "round_robin", "adaptive"):

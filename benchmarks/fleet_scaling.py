@@ -16,6 +16,7 @@ import json
 import os
 import time
 
+from benchmarks import _smoke
 from repro.core import workload
 from repro.core.agents import synthetic_fleet
 from repro.core.sweep import scenario_library, sweep, sweep_fleets
@@ -36,48 +37,52 @@ def _time(fn, reps: int) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(out_dir: str = "experiments/paper") -> list[str]:
+def run(out_dir: str | None = None) -> list[str]:
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
+    sizes = _smoke.sizes(FLEET_SIZES)
+    num_steps = _smoke.steps(NUM_STEPS)
     per_fleet = {}
-    fleets = [synthetic_fleet(n, seed=n) for n in FLEET_SIZES]
-    for n, fleet in zip(FLEET_SIZES, fleets):
+    fleets = [synthetic_fleet(n, seed=n) for n in sizes]
+    for n, fleet in zip(sizes, fleets):
         rates = workload.synthetic_rates(n, seed=n)
-        scenarios = scenario_library(rates, num_steps=NUM_STEPS, seed=SEED)
-        wall_us = _time(lambda: sweep(fleet, scenarios), REPS)
+        scenarios = scenario_library(rates, num_steps=num_steps, seed=SEED)
+        wall_us = _time(lambda: sweep(fleet, scenarios), _smoke.reps(REPS, 2))
         res = sweep(fleet, scenarios)
         cells = len(res.policy_names) * len(res.scenario_names)
         per_fleet[n] = {
             "grid_us": wall_us,
-            "us_per_step": wall_us / NUM_STEPS,
-            "us_per_step_per_cell": wall_us / (NUM_STEPS * cells),
+            "us_per_step": wall_us / num_steps,
+            "us_per_step_per_cell": wall_us / (num_steps * cells),
             "cells": cells,
         }
 
     # The batched path: every fleet size in ONE padded (F, P, W) grid,
     # sharded across jax.devices().
-    rate_vectors = [workload.synthetic_rates(n, seed=n) for n in FLEET_SIZES]
+    rate_vectors = [workload.synthetic_rates(n, seed=n) for n in sizes]
     batched_us = _time(
-        lambda: sweep_fleets(fleets, rate_vectors, num_steps=NUM_STEPS, seed=SEED),
-        BATCHED_REPS,
+        lambda: sweep_fleets(fleets, rate_vectors, num_steps=num_steps, seed=SEED),
+        _smoke.reps(BATCHED_REPS, 1),
     )
-    res = sweep_fleets(fleets, rate_vectors, num_steps=NUM_STEPS, seed=SEED)
+    res = sweep_fleets(fleets, rate_vectors, num_steps=num_steps, seed=SEED)
     batched = {
         "grid_us": batched_us,
-        "us_per_step": batched_us / NUM_STEPS,
-        "fleets": len(FLEET_SIZES),
-        "padded_width": max(FLEET_SIZES),
+        "us_per_step": batched_us / num_steps,
+        "fleets": len(sizes),
+        "padded_width": max(sizes),
         "cells": int(res.metrics[..., 0].size),
     }
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fleet_scaling.json"), "w") as fh:
         json.dump(
-            {"num_steps": NUM_STEPS, "per_fleet": per_fleet, "batched": batched},
+            {"num_steps": num_steps, "per_fleet": per_fleet, "batched": batched},
             fh, indent=1,
         )
 
-    growth = per_fleet[256]["us_per_step"] / per_fleet[4]["us_per_step"]
+    lo, hi = min(sizes), max(sizes)
+    growth = per_fleet[hi]["us_per_step"] / per_fleet[lo]["us_per_step"]
     return [
-        f"scaling/sweep_step_n4,{per_fleet[4]['us_per_step']:.1f},cells={per_fleet[4]['cells']}",
-        f"scaling/sweep_step_n256,{per_fleet[256]['us_per_step']:.1f},growth_64x_agents={growth:.1f}x",
-        f"scaling/fleet_grid,{batched_us:.1f},fleets={len(FLEET_SIZES)};padded_n={max(FLEET_SIZES)}",
+        f"scaling/sweep_step_n{lo},{per_fleet[lo]['us_per_step']:.1f},cells={per_fleet[lo]['cells']}",
+        f"scaling/sweep_step_n{hi},{per_fleet[hi]['us_per_step']:.1f},growth_{hi // lo}x_agents={growth:.1f}x",
+        f"scaling/fleet_grid,{batched_us:.1f},fleets={len(sizes)};padded_n={hi}",
     ]

@@ -9,21 +9,26 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import _smoke
 from repro.core import workload
 from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
 from repro.core.sweep import Scenario, sweep
 
 
-def run(out_dir: str = "experiments/paper") -> list[str]:
+def run(out_dir: str | None = None) -> list[str]:
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
     fleet = paper_fleet()
     rates = jnp.asarray(PAPER_ARRIVAL_RATES)
+    steps = _smoke.steps(100)
+    spike_start, spike_len = steps // 2, 3 * steps // 10
     scenarios = (
-        Scenario("constant", workload.constant(rates, 100)),
-        Scenario("overload_3x", workload.scaled(rates, 100, 3.0)),
+        Scenario("constant", workload.constant(rates, steps)),
+        Scenario("overload_3x", workload.scaled(rates, steps, 3.0)),
         Scenario("spike_10x",
-                 workload.spike(rates, 100, spike_agent=3, spike_start=50, spike_len=30)),
+                 workload.spike(rates, steps, spike_agent=3,
+                                spike_start=spike_start, spike_len=spike_len)),
         Scenario("dominated",
-                 workload.dominated(rates, 100, agent=0, share=0.9)),
+                 workload.dominated(rates, steps, agent=0, share=0.9)),
     )
     res = sweep(fleet, scenarios, policies=("adaptive",), keep_traces=True)
     alloc_grid = np.asarray(res.traces.allocation)  # (1, W, S, N)
@@ -43,12 +48,13 @@ def run(out_dir: str = "experiments/paper") -> list[str]:
     # (2) 10x spike: how many steps until the spiked agent's allocation
     # reaches 95% of its new steady-state share (paper: within 100 ms).
     g = alloc_grid[0, w["spike_10x"], :, 3]
-    steady = g[70]
-    steps = int(np.argmax(g[50:71] >= 0.95 * steady))
+    steady_at = spike_start + spike_len - spike_len // 3  # well inside the spike
+    steady = g[steady_at]
+    adapt = int(np.argmax(g[spike_start:steady_at + 1] >= 0.95 * steady))
     out["spike_10x"] = {
-        "pre_spike_alloc": round(float(g[49]), 4),
+        "pre_spike_alloc": round(float(g[spike_start - 1]), 4),
         "post_spike_alloc": round(float(steady), 4),
-        "steps_to_95pct": steps,
+        "steps_to_95pct": adapt,
     }
 
     # (3) one agent with 90% of requests must not monopolize the GPU.

@@ -10,6 +10,7 @@ import glob
 import json
 import os
 
+from benchmarks import _smoke
 from repro.launch.mesh import HW
 
 MOVE_DOWN = {
@@ -48,7 +49,8 @@ def markdown_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
-def run(out_dir: str = "experiments/paper") -> list[str]:
+def run(out_dir: str | None = None) -> list[str]:
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
     rows = load_rows()
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "roofline_table.md"), "w") as fh:

@@ -1,12 +1,19 @@
 """Benchmark driver — one module per paper table/figure + system benches.
 
 Prints ``name,us_per_call,derived`` CSV lines (us=0 where the benchmark is
-a metric table rather than a timing).
+a metric table rather than a timing).  ``--smoke`` (or
+``REPRO_BENCH_SMOKE=1``) runs every module in its reduced configuration —
+the CI liveness job that keeps new benchmarks from silently rotting.
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
+
+# --smoke must be in the environment before the modules read it.
+if "--smoke" in sys.argv[1:]:
+    os.environ["REPRO_BENCH_SMOKE"] = "1"
 
 from benchmarks import (
     allocator_scaling,
@@ -17,6 +24,7 @@ from benchmarks import (
     serving_engine,
     sweep_grid,
     table2_metrics,
+    workflow_topologies,
 )
 
 MODULES = (
@@ -24,6 +32,7 @@ MODULES = (
     ("fig2", fig2_timeseries),
     ("robustness", robustness),
     ("sweep_grid", sweep_grid),
+    ("workflow_topologies", workflow_topologies),
     ("allocator_scaling", allocator_scaling),
     ("fleet_scaling", fleet_scaling),
     ("roofline", roofline),
@@ -32,6 +41,8 @@ MODULES = (
 
 
 def main() -> None:
+    # Each module resolves its own artifact dir via _smoke.out_dir(), so
+    # smoke runs land in experiments/smoke/ from any entry point.
     failed = False
     print("name,us_per_call,derived")
     for name, mod in MODULES:

@@ -10,6 +10,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks import _smoke
 from repro.configs import get_config
 from repro.core.agents import AgentSpec, Fleet
 from repro.models.model import build_model
@@ -32,13 +33,14 @@ def _build(policy: str):
     return FleetEngine(fleet, rts, policy=policy, budget_tokens=32)
 
 
-def run(out_dir: str = "experiments/paper") -> list[str]:
+def run(out_dir: str | None = None) -> list[str]:
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
     res = {}
     for policy in ("adaptive", "static_equal", "round_robin"):
         eng = _build(policy)
         rng = np.random.default_rng(0)
         t0 = time.perf_counter()
-        for t in range(12):
+        for t in range(_smoke.steps(12, 6)):
             eng.submit("coordinator", rng.integers(0, 100, 6), 2)
             if t % 2 == 0:
                 eng.submit("nlp", rng.integers(0, 100, 6), 2)

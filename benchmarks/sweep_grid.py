@@ -10,13 +10,15 @@ import json
 import os
 import time
 
+from benchmarks import _smoke
 from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
 from repro.core.sweep import scenario_library, sweep
 
 
-def run(out_dir: str = "experiments/paper") -> list[str]:
+def run(out_dir: str | None = None) -> list[str]:
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
     fleet = paper_fleet()
-    scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=100, seed=0)
+    scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=_smoke.steps(100), seed=0)
     res = sweep(fleet, scenarios)  # warmup: compiles the grid
     t0 = time.perf_counter()
     res = sweep(fleet, scenarios)

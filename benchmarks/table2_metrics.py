@@ -10,6 +10,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks import _smoke
 from repro.core import workload
 from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
 from repro.core.allocator import adaptive_allocation
@@ -22,7 +23,8 @@ PAPER_TABLE2 = {
 }
 
 
-def run(out_dir: str = "experiments/paper") -> list[str]:
+def run(out_dir: str | None = None) -> list[str]:
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
     fleet = paper_fleet()
     scen = Scenario("constant", workload.constant(jnp.asarray(PAPER_ARRIVAL_RATES), 100))
     res = sweep(fleet, (scen,))
@@ -45,7 +47,7 @@ def run(out_dir: str = "experiments/paper") -> list[str]:
     f = jax.jit(lambda l: adaptive_allocation(l, fleet.min_gpu, fleet.priority))
     f(lam).block_until_ready()
     t0 = time.perf_counter()
-    n = 1000
+    n = _smoke.reps(1000, 20)
     for _ in range(n):
         f(lam).block_until_ready()
     us = (time.perf_counter() - t0) / n * 1e6

@@ -1,0 +1,88 @@
+"""Allocation policies ranked under workflow *topologies*, not just arrival
+processes — the scenario dimension the paper claims (collaborative
+reasoning: coordinators fanning out to specialists) but never parameterizes.
+
+One jitted (workflow × policy × scenario) grid over the paper's Table I
+fleet: the canonical topology library (independent, coordinator_star,
+pipeline_chain, hierarchical, synthetic DAG) against the standard scenario
+library, every registered policy.  Reports the grid wall time, the winning
+policy per topology/scenario by end-to-end critical-path latency, and how
+often the winner under the independent workflow *loses* once the same
+traffic flows through a topology — the routing layer's whole point.
+
+Writes ``experiments/paper/workflow_topologies.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks import _smoke
+from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
+from repro.core.simulator import METRIC_NAMES
+from repro.core.sweep import scenario_library, sweep_workflows, workflow_scenario_library
+
+RANK_METRICS = ("critical_path_latency", "avg_latency", "sink_throughput")
+
+
+def run(out_dir: str | None = None) -> list[str]:
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
+    fleet = paper_fleet()
+    num_steps = _smoke.steps(100)
+    workflows = workflow_scenario_library(fleet.num_agents, seed=0)
+    scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=num_steps, seed=0)
+
+    grid = lambda: sweep_workflows(fleet, workflows, scenarios)
+    res = grid()  # warmup: compiles the whole (K, P, W) program
+    t0 = time.perf_counter()
+    res = grid()
+    us = (time.perf_counter() - t0) * 1e6
+
+    table = res.table()
+    best = {
+        m: table.best(m, minimize=(m != "sink_throughput")) for m in RANK_METRICS
+    }
+
+    # How often does routing change the verdict?  Compare each topology's
+    # winner against the independent workflow's winner for the same scenario.
+    flips = 0
+    cells = 0
+    ref = {k.split("/", 1)[1]: v for k, v in best["critical_path_latency"].items()
+           if k.startswith("independent/")}
+    for key, pol in best["critical_path_latency"].items():
+        topo, scen = key.split("/", 1)
+        if topo == "independent":
+            continue
+        cells += 1
+        if ref.get(scen) != pol:
+            flips += 1
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "workflow_topologies.json"), "w") as fh:
+        json.dump(
+            {
+                "num_steps": num_steps,
+                "workflows": list(res.workflow_names),
+                "policies": list(res.policy_names),
+                "scenarios": list(res.scenario_names),
+                "metric_names": list(METRIC_NAMES),
+                "grid_us": us,
+                "best": best,
+                "winner_flips_vs_independent": {"flipped": flips, "cells": cells},
+                "rows": [dict(zip(table.columns, row)) for row in table.rows],
+            },
+            fh, indent=1,
+        )
+
+    k, p, w = len(res.workflow_names), len(res.policy_names), len(res.scenario_names)
+    out = [f"workflows/grid,{us:.1f},cells={k * p * w}"]
+    for topo in res.workflow_names:
+        wins = [v for key, v in best["critical_path_latency"].items()
+                if key.startswith(f"{topo}/")]
+        top = max(set(wins), key=wins.count) if wins else "n/a"
+        out.append(f"workflows/best_{topo},0,critpath_winner={top}")
+    out.append(
+        f"workflows/verdict_flips,0,{flips}/{cells}_cells_change_winner_vs_independent"
+    )
+    return out

@@ -24,8 +24,19 @@ from repro.core.allocator import (
     throughput_greedy,
     water_filling,
 )
+from repro.core import routing
 from repro.core import workload
 from repro.core.objective import ObjectiveWeights, step_objective
+from repro.core.routing import (
+    Workflow,
+    coordinator_star,
+    hierarchical,
+    independent_workflow,
+    pad_workflow,
+    pipeline_chain,
+    stack_workflows,
+    synthetic_workflow,
+)
 from repro.core.simulator import (
     METRIC_NAMES,
     SimConfig,
@@ -45,6 +56,8 @@ from repro.core.sweep import (
     scenario_library,
     sweep,
     sweep_fleets,
+    sweep_workflows,
+    workflow_scenario_library,
 )
 
 __all__ = [
@@ -58,6 +71,10 @@ __all__ = [
     "simulate_core", "summarize", "trace_metrics", "workload", "METRIC_NAMES",
     "Scenario", "SweepResult", "SweepSummary", "fleet_scenario_library",
     "scenario_library", "sweep", "sweep_fleets",
+    "routing", "Workflow", "coordinator_star", "hierarchical",
+    "independent_workflow", "pad_workflow", "pipeline_chain",
+    "stack_workflows", "synthetic_workflow", "sweep_workflows",
+    "workflow_scenario_library",
 ]
 
 

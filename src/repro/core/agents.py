@@ -24,6 +24,12 @@ Generators: ``paper_fleet()`` is the paper's exact Table I; ``scale_fleet``
 tiles it to N agents (min-GPU rescaled so Σ R_i is preserved);
 ``synthetic_fleet(n, seed)`` draws a reproducible random heterogeneous fleet
 for agent-count scaling studies.
+
+``Fleet`` describes *who* the agents are; its sibling pytree ``Workflow``
+(``core/routing.py``) describes how requests flow *between* them.  The two
+pad consistently: ``pad_workflow`` keeps the routing matrix aligned with
+``pad_fleet``'s ``active`` mask, so padded slots neither receive nor
+forward routed traffic.
 """
 from __future__ import annotations
 

@@ -20,6 +20,13 @@ module) under a uniform signature
 
     (t, lam_obs, lam_ema, queue, fleet, g_total) -> g
 
+Under workflow routing (``core/routing.py``) ``lam_obs`` is the agent's
+*total* intake — exogenous arrivals plus requests routed from upstream
+agents — and ``queue`` carries any backlog of routed traffic, so
+queue-pressure policies (``water_filling``, ``throughput_greedy``,
+``objective_descent``) and rate-driven ones (``adaptive``, ``predictive``)
+all see endogenous demand without any per-policy changes.
+
 The registry is the single source of truth for dispatch: the simulator's
 ``lax.switch`` branches, the serving engine's per-tick dispatch, and the
 vmapped sweep grid (``core/sweep.py``) are all built from it, so adding a

@@ -3,15 +3,117 @@
 A second, deliberately naive implementation of the queue dynamics (python
 loops, float64) used by property tests to cross-validate the vectorized
 ``lax.scan`` simulator — the same oracle pattern the Pallas kernels use
-(ref.py vs kernel).
+(ref.py vs kernel).  Covers the **entire** policy registry (including
+``throughput_greedy`` and ``objective_descent``, whose projected-gradient
+loop is re-derived here with a hand-written analytic gradient rather than
+``jax.grad``) and the workflow-routing path: when a ``Workflow`` is given,
+exogenous arrivals feed only source agents and each step's served requests
+are forwarded into downstream queues for the next step, exactly as in
+``simulator.simulate_core``.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.agents import Fleet
+from repro.core.routing import Workflow
 
 _EPS = 1e-9
+
+# Every registry entry the oracle reproduces; kept in sync with
+# ``allocator.policy_names()`` by tests/test_reference_sim.py.
+SUPPORTED_POLICIES = (
+    "static_equal",
+    "round_robin",
+    "adaptive",
+    "water_filling",
+    "predictive",
+    "throughput_greedy",
+    "objective_descent",
+)
+
+
+def _normalize(g: np.ndarray, g_total: float) -> np.ndarray:
+    """Proportional scale-down iff over capacity (Algorithm 1 lines 19-25)."""
+    if g.sum() > g_total:
+        g = g * (g_total / max(g.sum(), _EPS))
+    return g
+
+
+def _adaptive(src: np.ndarray, R: np.ndarray, P: np.ndarray, g_total: float) -> np.ndarray:
+    d = src * R / P
+    if d.sum() <= 0:
+        return np.zeros_like(src)
+    g = np.maximum(R, d / d.sum() * g_total)
+    return _normalize(g, g_total)
+
+
+def _throughput_greedy(
+    q: np.ndarray, lam: np.ndarray, T: np.ndarray, R: np.ndarray, g_total: float
+) -> np.ndarray:
+    x = q + lam
+    busy = x > 0
+    g = np.where(busy, R, 0.0)
+    need = np.where(busy, x / np.maximum(T, _EPS), 0.0)
+    extra = np.maximum(need - g, 0.0)
+    residual = max(g_total - g.sum(), 0.0)
+    # Highest-throughput agents first; stable sort matches jnp.argsort.
+    order = np.argsort(-T, kind="stable")
+    sorted_need = extra[order]
+    cum_before = np.cumsum(sorted_need) - sorted_need
+    grant_sorted = np.clip(residual - cum_before, 0.0, sorted_need)
+    grant = np.zeros_like(g)
+    grant[order] = grant_sorted
+    return _normalize(g + grant, g_total)
+
+
+def _objective_descent(
+    q: np.ndarray,
+    lam: np.ndarray,
+    T: np.ndarray,
+    R: np.ndarray,
+    P: np.ndarray,
+    g_total: float,
+    alpha: float = 1.0,
+    gamma: float = 10.0,
+    steps: int = 12,
+    lr: float = 0.05,
+    latency_cap: float = 1000.0,
+) -> np.ndarray:
+    """Projected gradient descent on the one-step Eq. (2) lookahead, with
+    the gradient derived by hand (the oracle must not depend on jax.grad).
+
+    Kinks (min/max ties) get the 0.5/0.5 split JAX's ``lax.min``/``lax.max``
+    use, so the two implementations agree even on the measure-zero tie set.
+    """
+    n = len(T)
+    x = q + lam
+    busy = x > 0
+    if not busy.any():
+        return np.zeros(n)
+    floor = np.where(busy, R, 0.0)
+
+    def project(g):
+        return _normalize(np.clip(g, floor, 1.0), g_total)
+
+    def grad(g):
+        c = g * T
+        denom = np.maximum(c, 1e-6)
+        served = np.minimum(c, x)
+        new_q = x - served
+        r = new_q / denom
+        ds_dc = np.where(c < x, 1.0, np.where(c > x, 0.0, 0.5))
+        dden_dc = np.where(c > 1e-6, 1.0, np.where(c < 1e-6, 0.0, 0.5))
+        dr_dc = (-ds_dc * denom - new_q * dden_dc) / denom**2
+        dlat_dc = dr_dc * np.where(
+            r < latency_cap, 1.0, np.where(r > latency_cap, 0.0, 0.5)
+        )
+        return (alpha * dlat_dc / n - gamma * ds_dc) * T
+
+    g = project(_adaptive(lam, R, P, g_total))
+    for _ in range(steps):
+        g = project(g - lr * grad(g))
+    return g
 
 
 def simulate_numpy(
@@ -21,21 +123,45 @@ def simulate_numpy(
     g_total: float = 1.0,
     latency_cap: float = 1000.0,
     ema_alpha: float = 0.3,
+    workflow: Workflow | None = None,
 ) -> dict:
-    """Returns per-step arrays matching SimTrace semantics."""
+    """Returns per-step arrays matching SimTrace semantics (plus
+    ``completed``, the requests exiting the workflow at each agent)."""
+    if policy not in SUPPORTED_POLICIES:
+        raise ValueError(
+            f"unknown policy {policy!r}; oracle supports {SUPPORTED_POLICIES}"
+        )
     T = np.asarray(fleet.base_throughput, np.float64)
     R = np.asarray(fleet.min_gpu, np.float64)
     P = np.asarray(fleet.priority, np.float64)
     n = len(T)
     steps = arrivals.shape[0]
+    active = np.asarray(fleet.active, np.float64)
+    if workflow is None:
+        route = np.zeros((n, n))
+        source = np.ones(n)
+        fan_out = np.ones(n)
+    else:
+        route = np.asarray(workflow.route, np.float64)
+        source = np.asarray(workflow.source, np.float64)
+        fan_out = np.asarray(workflow.fan_out, np.float64)
+    exit_frac = np.maximum(1.0 - route.sum(axis=1), 0.0)
+    # Same gating as the scan: exogenous arrivals enter only at active
+    # source agents, routed mass never wakes a padded slot.  (The policy
+    # branches themselves are mask-unaware — the oracle cross-validates
+    # unpadded fleets; padded-fleet parity is the registry's job.)
+    arrivals = np.asarray(arrivals, np.float64) * source[None, :] * active[None, :]
+
     q = np.zeros(n)
-    ema = np.asarray(arrivals[0], np.float64).copy()
-    out = {"allocation": [], "served": [], "queue": [], "latency": []}
+    endo = np.zeros(n)
+    ema = arrivals[0].copy()
+    out = {"allocation": [], "served": [], "queue": [], "latency": [],
+           "completed": []}
 
     for t in range(steps):
-        lam = np.asarray(arrivals[t], np.float64)
-        # EMA is seeded with arrivals[0]; applying the update again at t=0
-        # would double-count the first observation.
+        lam = arrivals[t] + endo  # total intake: exogenous + routed
+        # EMA is seeded with the first observation; applying the update
+        # again at t=0 would double-count it.
         if t > 0:
             ema = ema_alpha * lam + (1 - ema_alpha) * ema
         if policy == "static_equal":
@@ -44,14 +170,7 @@ def simulate_numpy(
             g = np.zeros(n)
             g[t % n] = g_total
         elif policy in ("adaptive", "predictive"):
-            src = lam if policy == "adaptive" else ema
-            d = src * R / P
-            if d.sum() <= 0:
-                g = np.zeros(n)
-            else:
-                g = np.maximum(R, d / d.sum() * g_total)
-                if g.sum() > g_total:
-                    g = g * (g_total / g.sum())
+            g = _adaptive(lam if policy == "adaptive" else ema, R, P, g_total)
         elif policy == "water_filling":
             pressure = (q + lam) / np.maximum(T, _EPS)
             if pressure.sum() <= 0:
@@ -59,16 +178,21 @@ def simulate_numpy(
             else:
                 prop = pressure / pressure.sum() * g_total
                 g = np.maximum(np.where(pressure > 0, R, 0.0), prop)
-                if g.sum() > g_total:
-                    g = g * (g_total / g.sum())
-        else:
-            raise ValueError(policy)
+                g = _normalize(g, g_total)
+        elif policy == "throughput_greedy":
+            g = _throughput_greedy(q, lam, T, R, g_total)
+        else:  # objective_descent
+            # NB: the registry entry always runs the policy's internal
+            # latency_cap default (1000), independent of the sim-level cap.
+            g = _objective_descent(q, lam, T, R, P, g_total)
         cap = g * T
         served = np.minimum(cap, q + lam)
         q = q + lam - served
         lat = np.minimum(q / np.maximum(cap, _EPS), latency_cap)
+        endo = ((served * fan_out) @ route) * active
         out["allocation"].append(g.copy())
         out["served"].append(served.copy())
         out["queue"].append(q.copy())
         out["latency"].append(lat.copy())
+        out["completed"].append(served * exit_frac)
     return {k: np.asarray(v) for k, v in out.items()}

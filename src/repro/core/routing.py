@@ -1,0 +1,331 @@
+"""Workflow-DAG routing: inter-agent request flow as a JAX pytree.
+
+The paper's subject is *collaborative* reasoning — lightweight coordinators
+fan requests out to heavyweight specialists — but an exogenous arrival
+process alone never exercises that: allocation quality under a workflow is
+driven by the *inter-agent dataflow*, not by marginal per-agent rates.
+``Workflow`` makes the dataflow a first-class, vmappable object:
+
+* ``route`` is an (N, N) row-substochastic forwarding matrix:
+  ``route[i, j]`` is the fraction of requests served at agent i that are
+  forwarded to agent j's queue on the *next* step.  The row deficit
+  ``1 - route[i].sum()`` is the fraction that **exits the workflow** at i
+  (a completed end-to-end request).  A zero matrix is today's independent
+  behavior: every served request completes where it was served.
+* ``source`` ∈ {0,1}^N marks where exogenous arrivals enter — the simulator
+  gates the workload generators by it, so only sources see outside traffic.
+* ``sink`` ∈ {0,1}^N marks terminal agents (route row identically zero).
+  Intermediate agents of a synthetic DAG may still exit a *fraction* of
+  their traffic mid-graph; sinks exit all of it.
+* ``fan_out`` (N,) multiplies forwarded copies: a coordinator with
+  ``fan_out=3`` spawns three specialist sub-requests per served request
+  (``arrivals_endogenous = (served * fan_out) @ route``).  The default of 1
+  conserves requests end-to-end: exogenous in = completed + in-flight.
+
+``Workflow`` mirrors ``Fleet`` (``core/agents.py``): arrays are pytree
+leaves, the topology name is static aux data, and ``pad_workflow`` /
+``stack_workflows`` pad the routing matrix consistently with the fleet's
+``active`` mask (padded slots receive nothing, forward nothing) so batches
+of workflows vmap as one array program (``core/sweep.py::sweep_workflows``).
+
+Generators cover the canonical multi-agent topologies: ``independent``
+(today's behavior), ``coordinator_star``, ``pipeline_chain``,
+``hierarchical`` (coordinator → specialists → aggregator), and
+``synthetic_workflow(n, seed)`` — a reproducible random DAG.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-5
+
+
+class _CosmeticName(str):
+    """A workflow's display name as pytree aux data that compares equal
+    regardless of content: two structurally identical workflows with
+    different names share one treedef — and therefore one jit trace — since
+    the name is never read inside traced code.  (Without this, sweeping
+    ``synthetic_workflow(n, seed)`` over seeds would recompile the scan
+    once per seed purely because the name embeds the seed.)"""
+
+    def __eq__(self, other):
+        return isinstance(other, _CosmeticName)
+
+    def __ne__(self, other):
+        return not isinstance(other, _CosmeticName)
+
+    def __hash__(self):
+        return hash(_CosmeticName)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Workflow:
+    """Inter-agent request-routing topology over N agent slots.
+
+    Arrays are pytree leaves; ``name`` is cosmetic static aux data —
+    workflows flow through ``jit``/``vmap``/``device_put`` exactly like
+    ``Fleet``, and same-shape workflows share one compiled trace whatever
+    they are called.
+    """
+
+    name: str
+    route: jnp.ndarray    # (N, N) row-substochastic forwarding matrix
+    source: jnp.ndarray   # (N,) 1.0 where exogenous arrivals enter
+    sink: jnp.ndarray     # (N,) 1.0 where requests terminate (row == 0)
+    fan_out: jnp.ndarray  # (N,) forwarded-copy multiplier, 1.0 = conserving
+
+    # -- pytree protocol: arrays are leaves, the name is static aux data. ----
+
+    def tree_flatten(self):
+        return (self.route, self.source, self.sink, self.fan_out), \
+            _CosmeticName(self.name)
+
+    @classmethod
+    def tree_unflatten(cls, name, children):
+        return cls(str(name), *children)
+
+    @property
+    def num_agents(self) -> int:
+        """Static slot count N (matches the fleet's padded width)."""
+        return self.route.shape[-1]
+
+    @property
+    def exit_fraction(self) -> jnp.ndarray:
+        """Per-agent fraction of served requests that exit the workflow."""
+        return jnp.maximum(1.0 - self.route.sum(axis=-1), 0.0)
+
+    def validate(self) -> None:
+        """Static sanity constraints (checked eagerly, outside jit)."""
+        route = np.asarray(self.route)
+        src = np.asarray(self.source)
+        snk = np.asarray(self.sink)
+        fo = np.asarray(self.fan_out)
+        n = route.shape[-1]
+        if route.shape[-2:] != (n, n):
+            raise ValueError(f"route must be square, got {route.shape}")
+        for name, flags in (("source", src), ("sink", snk)):
+            if flags.shape[-1] != n:
+                raise ValueError(f"{name} width {flags.shape[-1]} != {n}")
+            if not np.isin(flags, (0.0, 1.0)).all():
+                raise ValueError(f"{name} flags must be 0/1: {flags}")
+        if (route < -_EPS).any():
+            raise ValueError(f"route must be nonnegative: {route}")
+        rows = route.sum(axis=-1)
+        if (rows > 1.0 + _EPS).any():
+            raise ValueError(
+                f"route rows must sum to <= 1 (row deficit exits): {rows}"
+            )
+        if (np.abs(rows * snk) > _EPS).any():
+            raise ValueError("sink agents must have an all-zero route row")
+        if (fo < 0).any():
+            raise ValueError(f"fan_out must be nonnegative: {fo}")
+        if src.sum(axis=-1).min() < 1.0:
+            raise ValueError("workflow needs at least one source agent")
+        # The routing graph must be a DAG: critical-path metrics and the
+        # serving engine's request routing both assume acyclicity (cyclic
+        # workflows with damping are future work — see ROADMAP).
+        for adj in route.reshape(-1, n, n):
+            if _has_cycle(adj > _EPS):
+                raise ValueError("route must be acyclic (a workflow DAG)")
+
+
+def check_workflow(workflow: "Workflow", num_agents: int) -> None:
+    """The one workflow/fleet compatibility contract, shared by
+    ``simulate()``, ``FleetEngine`` and ``sweep_workflows``: the workflow
+    must validate and span exactly the fleet's slot count (padding included
+    — ``pad_workflow`` a narrower topology explicitly; implicit padding
+    would dilute masked metrics with zero-traffic agents)."""
+    if np.asarray(workflow.route).ndim != 2:
+        raise ValueError(
+            f"workflow {workflow.name!r} is batched (route shape "
+            f"{np.asarray(workflow.route).shape}); unbatched entry points "
+            "take a single topology — batched workflows only flow through "
+            "sweep_workflows' vmap"
+        )
+    workflow.validate()
+    if workflow.num_agents != num_agents:
+        raise ValueError(
+            f"workflow {workflow.name!r} has {workflow.num_agents} agents "
+            f"but the fleet has {num_agents}; pad_workflow it explicitly"
+        )
+
+
+def _has_cycle(adj: np.ndarray) -> bool:
+    """Kahn's topological sort on a boolean adjacency matrix, O(N + E)."""
+    indeg = adj.sum(axis=0)
+    ready = [i for i in range(adj.shape[0]) if indeg[i] == 0]
+    seen = 0
+    while ready:
+        i = ready.pop()
+        seen += 1
+        for j in np.nonzero(adj[i])[0]:
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                ready.append(j)
+    return seen < adj.shape[0]
+
+
+def _workflow(name, route, source, sink, fan_out=None):
+    n = route.shape[0]
+    return Workflow(
+        name=name,
+        route=jnp.asarray(route, jnp.float32),
+        source=jnp.asarray(source, jnp.float32),
+        sink=jnp.asarray(sink, jnp.float32),
+        fan_out=jnp.ones(n, jnp.float32) if fan_out is None else
+        jnp.asarray(fan_out, jnp.float32),
+    )
+
+
+def independent(n: int) -> Workflow:
+    """Today's behavior as a workflow: no routing, every agent is both a
+    source and a sink — a served request completes where it was served.
+    ``simulate(..., workflow=independent(n))`` is bit-for-bit identical to
+    ``simulate(...)`` without a workflow."""
+    if n < 1:
+        raise ValueError(f"workflow size must be >= 1, got {n}")
+    return _workflow("independent", np.zeros((n, n), np.float32),
+                     np.ones(n, np.float32), np.ones(n, np.float32))
+
+
+# Package-level alias (``repro.core.independent_workflow``): the bare name
+# ``independent`` is too generic outside this module.
+def independent_workflow(n: int) -> Workflow:
+    return independent(n)
+
+
+def coordinator_star(n: int, fan_out: float = 1.0) -> Workflow:
+    """Agent 0 is the coordinator (the only source); every served
+    coordinator request fans out uniformly to the n-1 specialist sinks."""
+    if n < 2:
+        raise ValueError(f"coordinator_star needs >= 2 agents, got {n}")
+    route = np.zeros((n, n), np.float32)
+    route[0, 1:] = 1.0 / (n - 1)
+    source = np.zeros(n, np.float32)
+    source[0] = 1.0
+    sink = np.ones(n, np.float32)
+    sink[0] = 0.0
+    fo = np.ones(n, np.float32)
+    fo[0] = fan_out
+    return _workflow("coordinator_star", route, source, sink, fo)
+
+
+def pipeline_chain(n: int) -> Workflow:
+    """Sequential stages: agent 0 (source) → 1 → … → n-1 (sink)."""
+    if n < 1:
+        raise ValueError(f"workflow size must be >= 1, got {n}")
+    route = np.zeros((n, n), np.float32)
+    for i in range(n - 1):
+        route[i, i + 1] = 1.0
+    source = np.zeros(n, np.float32)
+    source[0] = 1.0
+    sink = np.zeros(n, np.float32)
+    sink[n - 1] = 1.0
+    return _workflow("pipeline_chain", route, source, sink)
+
+
+def hierarchical(n: int, fan_out: float = 1.0) -> Workflow:
+    """Coordinator (agent 0, source) fans out to n-2 specialists; every
+    specialist forwards to the aggregator (agent n-1, the only sink)."""
+    if n < 3:
+        raise ValueError(f"hierarchical needs >= 3 agents, got {n}")
+    route = np.zeros((n, n), np.float32)
+    route[0, 1:n - 1] = 1.0 / (n - 2)
+    route[1:n - 1, n - 1] = 1.0
+    source = np.zeros(n, np.float32)
+    source[0] = 1.0
+    sink = np.zeros(n, np.float32)
+    sink[n - 1] = 1.0
+    fo = np.ones(n, np.float32)
+    fo[0] = fan_out
+    return _workflow("hierarchical", route, source, sink, fo)
+
+
+def synthetic_workflow(
+    n: int,
+    seed: int = 0,
+    edge_prob: float = 0.4,
+    forward_frac: tuple[float, float] = (0.4, 0.9),
+) -> Workflow:
+    """A reproducible random DAG over the agent order.
+
+    Edges only go forward (strictly upper-triangular route), so the graph is
+    acyclic by construction; each non-terminal agent forwards a random
+    fraction of its served requests (drawn from ``forward_frac``) across a
+    random successor subset and exits the rest mid-graph.  Sources are the
+    in-degree-0 agents (agent 0 always qualifies), sinks the out-degree-0
+    ones (agent n-1 always qualifies).
+    """
+    if n < 1:
+        raise ValueError(f"workflow size must be >= 1, got {n}")
+    rng = np.random.default_rng(seed)
+    route = np.zeros((n, n), np.float32)
+    for i in range(n - 1):
+        succ = rng.random(n - 1 - i) < edge_prob
+        if not succ.any():
+            succ[rng.integers(0, n - 1 - i)] = rng.random() < 0.7
+        if succ.any():
+            w = rng.uniform(0.1, 1.0, int(succ.sum()))
+            frac = rng.uniform(*forward_frac)
+            route[i, i + 1:][succ] = frac * w / w.sum()
+    source = (route.sum(axis=0) == 0).astype(np.float32)
+    sink = (route.sum(axis=1) == 0).astype(np.float32)
+    return _workflow(f"synthetic_s{seed}", route, source, sink)
+
+
+def pad_workflow(wf: Workflow, n_max: int) -> Workflow:
+    """Pad ``wf`` to ``n_max`` slots, consistent with ``pad_fleet``'s
+    ``active`` mask: padded slots receive nothing (zero route column),
+    forward nothing (zero route row), take no exogenous arrivals
+    (``source=0``) and are not sinks; ``fan_out=1`` keeps them inert."""
+    n = wf.num_agents
+    if n_max < n:
+        raise ValueError(f"cannot pad workflow of {n} agents down to {n_max}")
+    if n_max == n:
+        return wf
+    pad = n_max - n
+
+    def vec(a, fill):
+        return jnp.concatenate(
+            [jnp.asarray(a, jnp.float32), jnp.full((pad,), fill, jnp.float32)]
+        )
+
+    route = jnp.zeros((n_max, n_max), jnp.float32).at[:n, :n].set(
+        jnp.asarray(wf.route, jnp.float32)
+    )
+    return Workflow(
+        name=wf.name,
+        route=route,
+        source=vec(wf.source, 0.0),
+        sink=vec(wf.sink, 0.0),
+        fan_out=vec(wf.fan_out, 1.0),
+    )
+
+
+def stack_workflows(
+    workflows: Sequence[Workflow], n_max: int | None = None
+) -> Workflow:
+    """Pad ``workflows`` to a common width and stack every leaf along a new
+    leading workflow axis — (K, N, N) route, (K, N) flags — ready for
+    ``vmap`` over workflows (``core/sweep.py::sweep_workflows``)."""
+    if not workflows:
+        raise ValueError("stack_workflows needs at least one workflow")
+    width = max(w.num_agents for w in workflows)
+    n_max = width if n_max is None else n_max
+    if n_max < width:
+        raise ValueError(f"n_max={n_max} < widest workflow ({width} agents)")
+    padded = [pad_workflow(w, n_max) for w in workflows]
+    stack = lambda field: jnp.stack([getattr(w, field) for w in padded])
+    return Workflow(
+        name="+".join(w.name for w in workflows),
+        route=stack("route"),
+        source=stack("source"),
+        sink=stack("sink"),
+        fan_out=stack("fan_out"),
+    )

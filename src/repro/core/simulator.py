@@ -14,10 +14,23 @@ Semantics reconstructed from the paper (DESIGN.md §6):
 * cost is the provisioned-device cost: duration · price/hour — identical
   across policies, as in Table II.
 
+**Workflow routing** (``core/routing.py``) makes the multi-agent dataflow
+itself part of the dynamics: each step's *served* requests at agent i are
+routed into downstream queues for step t+1
+(``arrivals_endogenous = (served * fan_out) @ route``), exogenous
+generators feed only ``workflow.source`` agents, and the row deficit of the
+routing matrix exits the workflow as completed end-to-end requests
+(``SimTrace.completed``).  Policies observe the *total* intake — exogenous
+plus endogenous — so queue-pressure and rate-driven allocators both react
+to collaborative cascades.  With no workflow (or ``routing.independent``)
+the endogenous term is identically zero and trajectories are bit-for-bit
+what they were before routing existed.
+
 The whole run is one ``lax.scan``; policies are selected with ``lax.switch``
-built from the allocator's policy registry, and ``Fleet`` is a registered
-pytree, so a (fleets × policies × workloads) sweep is plain nested ``vmap``
-— see ``core/sweep.py`` for the grid runner.  Padded fleets are first-class:
+built from the allocator's policy registry, and ``Fleet`` / ``Workflow``
+are registered pytrees, so a (fleets × policies × workloads) or
+(workflows × policies × workloads) sweep is plain nested ``vmap`` — see
+``core/sweep.py`` for the grid runners.  Padded fleets are first-class:
 arrivals are gated by ``fleet.active`` and every metric reduction is
 mask-weighted, so a padded fleet reports the same numbers as its unpadded
 original.
@@ -33,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core import allocator as alloc
 from repro.core.agents import Fleet, T4_PRICE_PER_HOUR
+from repro.core.routing import Workflow, check_workflow
 
 _EPS = 1e-9
 
@@ -57,16 +71,29 @@ class SimConfig:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class SimTrace:
-    """Per-step, per-agent trajectories: everything Fig. 2 plots."""
+    """Per-step, per-agent trajectories: everything Fig. 2 plots.
+
+    ``arrivals`` records the *exogenous* input (gated by the workflow's
+    source flags and the fleet's active mask); ``completed`` the requests
+    that exited the workflow at each agent (= served, when no workflow
+    routes traffic).  The difference between served and completed is the
+    endogenous traffic forwarded downstream.
+    """
 
     allocation: jnp.ndarray  # (S, N) g_i(t)
     served: jnp.ndarray      # (S, N) requests served in step t
     queue: jnp.ndarray       # (S, N) backlog after step t
     latency: jnp.ndarray     # (S, N) clipped drain-time estimate
-    arrivals: jnp.ndarray    # (S, N)
+    arrivals: jnp.ndarray    # (S, N) exogenous arrivals (source-gated)
+    completed: jnp.ndarray = None  # (S, N) requests exiting the workflow
+
+    def __post_init__(self):
+        if self.completed is None:
+            self.completed = self.served
 
     def tree_flatten(self):
-        return (self.allocation, self.served, self.queue, self.latency, self.arrivals), None
+        return (self.allocation, self.served, self.queue, self.latency,
+                self.arrivals, self.completed), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -87,6 +114,40 @@ class SimSummary:
     gpu_utilization: float      # mean Σ g_i
     littles_law_latency: float  # unclipped long-run estimate
     mean_queue: float
+    # Workflow (end-to-end) metrics; equal their per-agent analogues when no
+    # workflow routes traffic.
+    sink_throughput: float = 0.0        # requests exiting the workflow / s
+    critical_path_latency: float = 0.0  # longest source→sink latency chain
+    per_agent_queue: tuple = ()         # per-stage mean backlog
+
+    @classmethod
+    def from_metrics(
+        cls,
+        policy: str,
+        m: dict,
+        per_agent_latency,
+        per_agent_throughput,
+        per_agent_queue,
+        cost: float,
+    ) -> "SimSummary":
+        """The one METRIC_NAMES-dict → summary mapping, shared by
+        ``summarize`` and ``SweepResult.summary`` so a new metric cannot be
+        threaded through one path and silently default on the other."""
+        return cls(
+            policy=policy,
+            avg_latency=m["avg_latency"],
+            latency_std=m["latency_std"],
+            per_agent_latency=tuple(float(x) for x in per_agent_latency),
+            total_throughput=m["total_throughput"],
+            per_agent_throughput=tuple(float(x) for x in per_agent_throughput),
+            cost=float(cost),
+            gpu_utilization=m["gpu_utilization"],
+            littles_law_latency=m["littles_law_latency"],
+            mean_queue=m["mean_queue"],
+            sink_throughput=m["sink_throughput"],
+            critical_path_latency=m["critical_path_latency"],
+            per_agent_queue=tuple(float(x) for x in per_agent_queue),
+        )
 
 
 def simulate_core(
@@ -95,20 +156,37 @@ def simulate_core(
     fleet: Fleet,
     config: SimConfig,
     policy_names: Sequence[str] | None = None,
+    workflow: Workflow | None = None,
 ) -> SimTrace:
-    """Pure scan body — jit/vmap-able over ``policy_id``, ``arrivals`` and
-    the ``fleet`` pytree (including a batched fleet axis).
+    """Pure scan body — jit/vmap-able over ``policy_id``, ``arrivals``, the
+    ``fleet`` pytree and the ``workflow`` pytree (both may carry a batch
+    axis).
 
     The EMA carry is seeded with the first observation; the update is skipped
-    at t=0 so that observation is not applied twice.  Arrivals are gated by
-    ``fleet.active`` so padding slots never accumulate queue.
+    at t=0 so that observation is not applied twice.  Exogenous arrivals are
+    gated by ``fleet.active`` (padding slots never accumulate queue) and by
+    ``workflow.source`` (only source agents see outside traffic); each
+    step's served requests are fanned into downstream queues for the next
+    step via the routing matrix.  With ``workflow=None`` the endogenous
+    path contributes exact zeros — trajectories are bit-for-bit identical
+    to the pre-routing simulator.
     """
     names = alloc.policy_names() if policy_names is None else tuple(policy_names)
-    arrivals = arrivals * fleet.active
+    n = fleet.num_agents
+    if workflow is None:
+        route = jnp.zeros((n, n), jnp.float32)
+        source = jnp.ones(n, jnp.float32)
+        fan_out = jnp.ones(n, jnp.float32)
+    else:
+        route, source, fan_out = workflow.route, workflow.source, workflow.fan_out
+    arrivals = arrivals * fleet.active * source
+    route_eff = route * fan_out[..., :, None]   # forwarded copies
+    exit_frac = jnp.maximum(1.0 - route.sum(axis=-1), 0.0)
 
     def step(carry, inp):
-        queue, lam_ema = carry
-        t, lam = inp
+        queue, lam_ema, endo = carry
+        t, lam_exo = inp
+        lam = lam_exo + endo            # total intake: exogenous + routed
         lam_ema = jnp.where(
             t > 0, alloc.ema_forecast(lam_ema, lam, config.ema_alpha), lam_ema
         )
@@ -121,17 +199,28 @@ def simulate_core(
         latency = jnp.minimum(
             new_queue / jnp.maximum(capacity, _EPS), config.latency_cap
         )
-        return (new_queue, lam_ema), (g, served, new_queue, latency)
+        completed = served * exit_frac  # row deficit exits the workflow
+        # Routed mass arrives downstream next step; the active gate keeps
+        # padded slots inert even if a route column points at one (the
+        # misrouted mass is dropped, exactly like gated exogenous traffic).
+        new_endo = (served @ route_eff) * fleet.active
+        return (new_queue, lam_ema, new_endo), (g, served, new_queue, latency, completed)
 
     num_steps = arrivals.shape[0]
     ts = jnp.arange(num_steps)
-    init = (jnp.zeros(fleet.num_agents, jnp.float32), arrivals[0])
-    (_, _), (g, served, queue, latency) = jax.lax.scan(step, init, (ts, arrivals))
-    return SimTrace(g, served, queue, latency, arrivals)
+    init = (
+        jnp.zeros(n, jnp.float32),
+        arrivals[0],
+        jnp.zeros(n, jnp.float32),
+    )
+    _, (g, served, queue, latency, completed) = jax.lax.scan(
+        step, init, (ts, arrivals)
+    )
+    return SimTrace(g, served, queue, latency, arrivals, completed)
 
 
-# ``Fleet`` is a registered pytree (names are static aux data), so it passes
-# straight through jit — no array/static plumbing.
+# ``Fleet`` and ``Workflow`` are registered pytrees (names are static aux
+# data), so they pass straight through jit — no array/static plumbing.
 _simulate_jit = jax.jit(simulate_core, static_argnames=("config", "policy_names"))
 
 
@@ -140,12 +229,16 @@ def simulate(
     arrivals: jnp.ndarray,
     fleet: Fleet,
     config: SimConfig = SimConfig(),
+    workflow: Workflow | None = None,
 ) -> SimTrace:
-    """Run one registered policy over an (S, N) arrival matrix."""
+    """Run one registered policy over an (S, N) arrival matrix, optionally
+    routing served requests through a ``Workflow`` topology."""
     fleet.validate()
+    if workflow is not None:
+        check_workflow(workflow, fleet.num_agents)
     return _simulate_jit(
         jnp.asarray(alloc.policy_id(policy)), arrivals, fleet, config,
-        alloc.policy_names(),
+        alloc.policy_names(), workflow,
     )
 
 
@@ -158,30 +251,65 @@ METRIC_NAMES = (
     "gpu_utilization",
     "mean_queue",
     "littles_law_latency",
+    "sink_throughput",
+    "critical_path_latency",
 )
 
 
+def critical_path_latency(
+    per_agent_latency: jnp.ndarray,
+    workflow: Workflow | None,
+    mask: jnp.ndarray,
+) -> jnp.ndarray:
+    """Longest source→sink chain of per-stage latencies through the DAG.
+
+    ``cp_i = lat_i + max over successors cp_j``, iterated N times (a DAG
+    over N agents has depth < N), then maximized over source agents.  With
+    no workflow every agent is its own one-stage path, so this reduces to
+    the max per-agent latency over active agents.
+    """
+    if workflow is None:
+        return (per_agent_latency * mask).max()
+    adj = (workflow.route > 0).astype(per_agent_latency.dtype)  # (N, N)
+    n = per_agent_latency.shape[-1]
+
+    def body(_, cp):
+        return per_agent_latency + (adj * cp[None, :]).max(axis=-1)
+
+    cp = jax.lax.fori_loop(0, n, body, per_agent_latency)
+    return (cp * workflow.source * mask).max()
+
+
 def trace_metrics(
-    trace: SimTrace, active: jnp.ndarray | None = None
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Table II reductions for one trace, jit/vmap-safe.
+    trace: SimTrace,
+    active: jnp.ndarray | None = None,
+    workflow: Workflow | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Table II + workflow reductions for one trace, jit/vmap-safe.
 
     Returns (metric vector in METRIC_NAMES order, per-agent mean latency,
-    per-agent mean throughput).  The single definition behind both
-    ``summarize`` and the sweep grid.
+    per-agent mean throughput, per-agent mean queue — the per-stage backlog
+    of a workflow pipeline).  The single definition behind both
+    ``summarize`` and the sweep grids.
 
     ``active`` is the fleet's validity mask: per-agent means/stds weight by
     it, so padded slots (latency 0, throughput 0) never dilute the metrics.
     With the default all-ones mask this is exactly the unweighted reduction.
+    ``workflow`` feeds the end-to-end metrics: ``sink_throughput`` counts
+    requests *exiting* the workflow (served = sink throughput when nothing
+    is routed) and ``critical_path_latency`` chains per-stage latencies
+    along the routing DAG.
     """
     m = jnp.ones(trace.latency.shape[-1]) if active is None else active
     n_active = jnp.maximum(m.sum(), 1.0)
     mmean = lambda x: (x * m).sum() / n_active  # masked mean over agents
     per_lat = trace.latency.mean(axis=0)
     per_tput = trace.served.mean(axis=0)
+    per_queue = trace.queue.mean(axis=0)
+    completed = trace.completed  # == served when nothing is routed
     # Unclipped long-run latency: mean backlog over long-run service rate.
     longrun_rate = jnp.maximum(per_tput, _EPS)
-    littles = mmean(trace.queue.mean(axis=0) / longrun_rate)
+    littles = mmean(per_queue / longrun_rate)
     lat_mean = mmean(per_lat)
     lat_std = jnp.sqrt(mmean((per_lat - lat_mean) ** 2))
     vec = jnp.stack([
@@ -189,10 +317,12 @@ def trace_metrics(
         lat_std,
         per_tput.sum(),
         trace.allocation.sum(axis=1).mean(),
-        mmean(trace.queue.mean(axis=0)),
+        mmean(per_queue),
         littles,
+        (completed.mean(axis=0) * m).sum(),
+        critical_path_latency(per_lat, workflow, m),
     ])
-    return vec, per_lat, per_tput
+    return vec, per_lat, per_tput, per_queue
 
 
 def summarize(
@@ -200,23 +330,17 @@ def summarize(
     trace: SimTrace,
     config: SimConfig = SimConfig(),
     active: jnp.ndarray | None = None,
+    workflow: Workflow | None = None,
 ) -> SimSummary:
     """Table II metrics from a trace (``active`` masks padded agents)."""
-    vec, per_agent_lat, per_agent_tput = trace_metrics(trace, active)
+    vec, per_agent_lat, per_agent_tput, per_agent_queue = trace_metrics(
+        trace, active, workflow
+    )
     duration_s = trace.served.shape[0]
     cost = config.num_gpus * duration_s / 3600.0 * config.price_per_hour
     m = dict(zip(METRIC_NAMES, (float(x) for x in vec)))
-    return SimSummary(
-        policy=policy,
-        avg_latency=m["avg_latency"],
-        latency_std=m["latency_std"],
-        per_agent_latency=tuple(float(x) for x in per_agent_lat),
-        total_throughput=m["total_throughput"],
-        per_agent_throughput=tuple(float(x) for x in per_agent_tput),
-        cost=float(cost),
-        gpu_utilization=m["gpu_utilization"],
-        littles_law_latency=m["littles_law_latency"],
-        mean_queue=m["mean_queue"],
+    return SimSummary.from_metrics(
+        policy, m, per_agent_lat, per_agent_tput, per_agent_queue, cost
     )
 
 
@@ -225,7 +349,12 @@ def run_policy(
     arrivals: jnp.ndarray,
     fleet: Fleet,
     config: SimConfig = SimConfig(),
+    workflow: Workflow | None = None,
 ) -> SimSummary:
     return summarize(
-        policy, simulate(policy, arrivals, fleet, config), config, fleet.active
+        policy,
+        simulate(policy, arrivals, fleet, config, workflow),
+        config,
+        fleet.active,
+        workflow,
     )

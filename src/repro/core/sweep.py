@@ -1,26 +1,33 @@
-"""Vmapped (fleet × policy × workload) sweep grids — the evaluation surface.
+"""Vmapped (fleet | workflow × policy × workload) sweep grids — the
+evaluation surface.
 
 The paper's claim (Table II / Fig. 2) is comparative: adaptive vs baselines
 across workloads.  This module evaluates the *entire* policy registry
-against a scenario library in ONE jitted call, and — because ``Fleet`` is a
-registered pytree with an agent-validity mask (``core/agents.py``) — scales
-that grid along a third, batched **fleet axis** of heterogeneous fleet
-sizes:
+against a scenario library in ONE jitted call, and — because ``Fleet`` and
+``Workflow`` are registered pytrees (``core/agents.py`` /
+``core/routing.py``) — scales that grid along a batched **fleet axis** of
+heterogeneous fleet sizes or a batched **workflow axis** of routing
+topologies:
 
     sweep(fleet, scenario_library(rates))          ->  SweepResult (P, W)
     sweep_fleets([fleet_4, ..., fleet_256])        ->  SweepResult (F, P, W)
+    sweep_workflows(fleet, scenarios=...)          ->  SweepResult (K, P, W)
 
 ``sweep`` nests ``vmap(policy) ∘ vmap(workload)`` over ``simulate_core``;
 ``sweep_fleets`` pads every fleet to a common width, stacks them
 (``stack_fleets``), builds one matched, padded scenario column per fleet
-(``fleet_scenario_library``), and adds ``vmap(fleet)`` outermost.  Padded
-slots contribute zero demand, receive exactly g = 0 from every registered
-policy, and are excluded from all metric reductions, so each row of the
-batched grid matches the per-fleet unbatched ``sweep`` within float
-tolerance.
+(``fleet_scenario_library``), and adds ``vmap(fleet)`` outermost.
+``sweep_workflows`` stacks routing topologies (``stack_workflows``) and
+adds ``vmap(workflow)`` outermost — policies are ranked under *inter-agent
+dataflow*, not just arrival processes; ``workflow_scenario_library`` builds
+the canonical topology set for a fleet width.  Padded slots contribute zero
+demand, receive exactly g = 0 from every registered policy, are excluded
+from all metric reductions, and receive/forward no routed traffic
+(``pad_workflow``), so each row of a batched grid matches its unbatched
+original within float tolerance.
 
-The batched grid is **device-sharded**: the fleet axis is laid out across
-``jax.devices()`` with a 1D mesh + ``NamedSharding`` (the
+The batched fleet grid is **device-sharded**: the fleet axis is laid out
+across ``jax.devices()`` with a 1D mesh + ``NamedSharding`` (the
 ``launch/mesh.py`` / ``distributed/sharding.py`` conventions: non-divisible
 axes fall back to replication), producing identical metrics on a single
 device and near-linear scaling on many.
@@ -42,8 +49,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import allocator as alloc
+from repro.core import routing
 from repro.core import workload
 from repro.core.agents import Fleet, stack_fleets
+from repro.core.routing import Workflow, stack_workflows
 from repro.core.simulator import (
     METRIC_NAMES,
     SimConfig,
@@ -146,8 +155,9 @@ class SweepSummary:
         return out
 
     def best(self, metric: str = "avg_latency", minimize: bool = True) -> dict[str, str]:
-        """Winning policy per scenario (per fleet/scenario when the table
-        has a fleet axis) under one metric.
+        """Winning policy per scenario (per fleet/scenario or
+        workflow/scenario when the table has a leading batch axis) under
+        one metric.
 
         Comparisons are strict, so exact ties are stable: the first row in
         table order (= policy-registry order) keeps the win in both the
@@ -156,7 +166,11 @@ class SweepSummary:
         mi = self.columns.index(metric)
         si = self.columns.index("scenario")
         pi = self.columns.index("policy")
-        fi = self.columns.index("fleet") if "fleet" in self.columns else None
+        fi = next(
+            (self.columns.index(c) for c in ("fleet", "workflow")
+             if c in self.columns),
+            None,
+        )
         winners: dict[str, tuple[str, float]] = {}
         for row in self.rows:
             key = row[si] if fi is None else f"{row[fi]}/{row[si]}"
@@ -172,113 +186,134 @@ class SweepSummary:
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """Raw grids from one sweep; axes are ([fleet,] policy, scenario[, agent]).
+    """Raw grids from one sweep; axes are ([fleet | workflow,] policy,
+    scenario[, agent]).
 
-    ``fleet_names`` is None for a plain 2-axis ``sweep``; when set (the
-    ``sweep_fleets`` path) every grid carries a leading fleet axis.
+    ``fleet_names`` / ``workflow_names`` are None for a plain 2-axis
+    ``sweep``; when one is set (the ``sweep_fleets`` / ``sweep_workflows``
+    paths) every grid carries that leading batch axis.
     """
 
     policy_names: tuple[str, ...]
     scenario_names: tuple[str, ...]
-    metrics: np.ndarray               # ([F,] P, W, len(METRIC_NAMES)) float32
-    per_agent_latency: np.ndarray     # ([F,] P, W, N)
-    per_agent_throughput: np.ndarray  # ([F,] P, W, N)
+    metrics: np.ndarray               # ([F|K,] P, W, len(METRIC_NAMES)) float32
+    per_agent_latency: np.ndarray     # ([F|K,] P, W, N)
+    per_agent_throughput: np.ndarray  # ([F|K,] P, W, N)
     cost: float                       # provisioned $, identical across cells
     config: SimConfig
-    traces: SimTrace | None = None    # leaves ([F,] P, W, S, N) when kept
+    traces: SimTrace | None = None    # leaves ([F|K,] P, W, S, N) when kept
     fleet_names: tuple[str, ...] | None = None
+    workflow_names: tuple[str, ...] | None = None
+    per_agent_queue: np.ndarray | None = None  # ([F|K,] P, W, N) per-stage backlog
+
+    def _leading_axis(self) -> tuple[str, tuple[str, ...]] | None:
+        if self.fleet_names is not None:
+            return "fleet", self.fleet_names
+        if self.workflow_names is not None:
+            return "workflow", self.workflow_names
+        return None
 
     def metric(self, name: str) -> np.ndarray:
         return self.metrics[..., METRIC_NAMES.index(name)]
 
-    def _cell_index(self, policy: str, scenario: str, fleet: str | None):
+    def _cell_index(
+        self,
+        policy: str,
+        scenario: str,
+        fleet: str | None,
+        workflow: str | None = None,
+    ):
         p = self.policy_names.index(policy)
         w = self.scenario_names.index(scenario)
-        if self.fleet_names is None:
-            if fleet is not None:
-                raise ValueError("this sweep has no fleet axis")
+        lead = self._leading_axis()
+        picked = {"fleet": fleet, "workflow": workflow}
+        if lead is None:
+            bad = [k for k, v in picked.items() if v is not None]
+            if bad:
+                raise ValueError(f"this sweep has no {bad[0]} axis")
             return (p, w)
-        if fleet is None:
-            raise ValueError(f"fleet axis present; pick one of {self.fleet_names}")
-        return (self.fleet_names.index(fleet), p, w)
+        axis, names = lead
+        if picked[axis] is None:
+            raise ValueError(f"{axis} axis present; pick one of {names}")
+        other = "workflow" if axis == "fleet" else "fleet"
+        if picked[other] is not None:
+            raise ValueError(f"this sweep has no {other} axis")
+        return (names.index(picked[axis]), p, w)
 
     def summary(
-        self, policy: str, scenario: str, fleet: str | None = None
+        self,
+        policy: str,
+        scenario: str,
+        fleet: str | None = None,
+        workflow: str | None = None,
     ) -> SimSummary:
         """One cell as a ``SimSummary`` — same fields as ``run_policy``."""
-        idx = self._cell_index(policy, scenario, fleet)
+        idx = self._cell_index(policy, scenario, fleet, workflow)
         m = dict(zip(METRIC_NAMES, (float(x) for x in self.metrics[idx])))
-        return SimSummary(
-            policy=policy,
-            avg_latency=m["avg_latency"],
-            latency_std=m["latency_std"],
-            per_agent_latency=tuple(float(x) for x in self.per_agent_latency[idx]),
-            total_throughput=m["total_throughput"],
-            per_agent_throughput=tuple(float(x) for x in self.per_agent_throughput[idx]),
-            cost=self.cost,
-            gpu_utilization=m["gpu_utilization"],
-            littles_law_latency=m["littles_law_latency"],
-            mean_queue=m["mean_queue"],
+        per_queue = (
+            () if self.per_agent_queue is None else self.per_agent_queue[idx]
+        )
+        return SimSummary.from_metrics(
+            policy, m, self.per_agent_latency[idx],
+            self.per_agent_throughput[idx], per_queue, self.cost,
         )
 
     def table(self) -> SweepSummary:
         base = ("policy", "scenario") + METRIC_NAMES + ("cost",)
-        # One loop serves both shapes: a fleetless grid is a single
-        # anonymous fleet whose prefix column is dropped.
-        has_fleet = self.fleet_names is not None
-        fleet_axis = self.fleet_names if has_fleet else (None,)
+        # One loop serves all shapes: an unbatched grid is a single
+        # anonymous leading slot whose prefix column is dropped.
+        lead = self._leading_axis()
+        lead_names = (None,) if lead is None else lead[1]
         rows = []
-        for f, fl in enumerate(fleet_axis):
-            grid = self.metrics[f] if has_fleet else self.metrics
+        for f, fl in enumerate(lead_names):
+            grid = self.metrics if lead is None else self.metrics[f]
             for p, pol in enumerate(self.policy_names):
                 for w, scen in enumerate(self.scenario_names):
-                    prefix = (fl, pol, scen) if has_fleet else (pol, scen)
+                    prefix = (pol, scen) if lead is None else (fl, pol, scen)
                     rows.append(
                         prefix + tuple(float(x) for x in grid[p, w]) + (self.cost,)
                     )
-        columns = (("fleet",) + base) if has_fleet else base
+        columns = base if lead is None else ((lead[0],) + base)
         return SweepSummary(columns=columns, rows=tuple(rows))
 
 
-@functools.partial(jax.jit, static_argnames=("config", "reg_names", "keep_traces"))
-def _sweep_jit(
+@functools.partial(
+    jax.jit, static_argnames=("config", "reg_names", "keep_traces", "batch_axis")
+)
+def _grid_jit(
     pids: jnp.ndarray,
-    arrivals: jnp.ndarray,
-    fleet: Fleet,
+    arrivals: jnp.ndarray,   # (W, S, N), or (F, W, S, N) when batch_axis="fleet"
+    fleet: Fleet,            # leaves (N,), or (F, N) when batch_axis="fleet"
+    workflow: Workflow | None,  # leaves (K, N, N)/(K, N) when batch_axis="workflow"
     config: SimConfig,
     reg_names: tuple,
     keep_traces: bool,
+    batch_axis: str | None,
 ):
-    def cell(pid, arr):
-        trace = simulate_core(pid, arr, fleet, config, reg_names)
-        vec, per_lat, per_tput = trace_metrics(trace, fleet.active)
+    """The one (policy × scenario) grid kernel behind every sweep.
+
+    ``batch_axis`` picks the outermost vmapped dimension: None (plain
+    ``sweep``), "fleet" (batched fleet leaves + matched per-fleet arrival
+    columns), or "workflow" (batched routing topologies over one shared
+    scenario block).
+    """
+
+    def cell(fl, wf, pid, arr):
+        trace = simulate_core(pid, arr, fl, config, reg_names, wf)
+        vec, per_lat, per_tput, per_q = trace_metrics(trace, fl.active, wf)
         if keep_traces:
-            return vec, per_lat, per_tput, trace
-        return vec, per_lat, per_tput
+            return vec, per_lat, per_tput, per_q, trace
+        return vec, per_lat, per_tput, per_q
 
-    return jax.vmap(lambda pid: jax.vmap(lambda a: cell(pid, a))(arrivals))(pids)
-
-
-@functools.partial(jax.jit, static_argnames=("config", "reg_names", "keep_traces"))
-def _fleet_sweep_jit(
-    pids: jnp.ndarray,
-    arrivals: jnp.ndarray,  # (F, W, S, N)
-    fleet: Fleet,           # leaves (F, N)
-    config: SimConfig,
-    reg_names: tuple,
-    keep_traces: bool,
-):
-    def cell(fl, pid, arr):
-        trace = simulate_core(pid, arr, fl, config, reg_names)
-        vec, per_lat, per_tput = trace_metrics(trace, fl.active)
-        if keep_traces:
-            return vec, per_lat, per_tput, trace
-        return vec, per_lat, per_tput
-
-    over_scen = jax.vmap(cell, in_axes=(None, None, 0))
-    over_pol = jax.vmap(over_scen, in_axes=(None, 0, None))
-    over_fleet = jax.vmap(over_pol, in_axes=(0, None, 0))
-    return over_fleet(fleet, pids, arrivals)
+    over_scen = jax.vmap(cell, in_axes=(None, None, None, 0))
+    over_pol = jax.vmap(over_scen, in_axes=(None, None, 0, None))
+    if batch_axis is None:
+        return over_pol(fleet, workflow, pids, arrivals)
+    outer_axes = {
+        "fleet": (0, None, None, 0),
+        "workflow": (None, 0, None, None),
+    }[batch_axis]
+    return jax.vmap(over_pol, in_axes=outer_axes)(fleet, workflow, pids, arrivals)
 
 
 def grid_mesh() -> jax.sharding.Mesh:
@@ -327,9 +362,10 @@ def sweep(
         [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
     )  # (W, S, N)
 
-    out = _sweep_jit(pids, arrivals, fleet, config, reg_names, keep_traces)
-    metrics, per_lat, per_tput = (np.asarray(x) for x in out[:3])
-    traces = out[3] if keep_traces else None
+    out = _grid_jit(pids, arrivals, fleet, None, config, reg_names, keep_traces,
+                    None)
+    metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
+    traces = out[4] if keep_traces else None
 
     num_steps = arrivals.shape[1]
     cost = config.num_gpus * num_steps / 3600.0 * config.price_per_hour
@@ -342,6 +378,7 @@ def sweep(
         cost=float(cost),
         config=config,
         traces=traces,
+        per_agent_queue=per_q,
     )
 
 
@@ -402,9 +439,10 @@ def sweep_fleets(
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
-    out = _fleet_sweep_jit(pids, arrivals, stacked, config, reg_names, keep_traces)
-    metrics, per_lat, per_tput = (np.asarray(x) for x in out[:3])
-    traces = out[3] if keep_traces else None
+    out = _grid_jit(pids, arrivals, stacked, None, config, reg_names, keep_traces,
+                    "fleet")
+    metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
+    traces = out[4] if keep_traces else None
 
     cost = config.num_gpus * num_steps / 3600.0 * config.price_per_hour
     return SweepResult(
@@ -417,4 +455,93 @@ def sweep_fleets(
         config=config,
         traces=traces,
         fleet_names=fleet_names,
+        per_agent_queue=per_q,
+    )
+
+
+def workflow_scenario_library(
+    num_agents: int, seed: int = 0, fan_out: float = 1.0
+) -> tuple[Workflow, ...]:
+    """The canonical workflow-topology set for one fleet width.
+
+    ``independent`` (today's exogenous behavior), ``coordinator_star``,
+    ``pipeline_chain``, ``hierarchical`` (when the width allows it) and a
+    reproducible random DAG.  The workflow axis of ``sweep_workflows``.
+    """
+    wfs = [routing.independent(num_agents)]
+    if num_agents >= 2:
+        wfs.append(routing.coordinator_star(num_agents, fan_out=fan_out))
+        wfs.append(routing.pipeline_chain(num_agents))
+    if num_agents >= 3:
+        wfs.append(routing.hierarchical(num_agents, fan_out=fan_out))
+    wfs.append(routing.synthetic_workflow(num_agents, seed=seed))
+    return tuple(wfs)
+
+
+def sweep_workflows(
+    fleet: Fleet,
+    workflows: Sequence[Workflow] | None = None,
+    scenarios: Sequence[Scenario] | None = None,
+    num_steps: int = 100,
+    seed: int = 0,
+    config: SimConfig = SimConfig(),
+    policies: Sequence[str] | None = None,
+    keep_traces: bool = False,
+) -> SweepResult:
+    """One jitted (workflow × policy × scenario) grid over one fleet.
+
+    Every workflow must already span the fleet's width (``pad_workflow`` a
+    narrower topology explicitly); they are stacked into a single batched
+    ``Workflow`` pytree (``stack_workflows``).  The same scenario block
+    feeds every topology — the simulator gates exogenous arrivals by each
+    workflow's source flags, so a coordinator-star column only injects
+    traffic at the coordinator.  Defaults: the canonical topology library
+    at the fleet's width, and the standard scenario library over
+    ``workload.synthetic_rates``.
+    """
+    fleet.validate()
+    n = fleet.num_agents
+    if workflows is None:
+        workflows = workflow_scenario_library(n, seed=seed)
+    workflows = list(workflows)
+    if not workflows:
+        raise ValueError("sweep_workflows needs at least one workflow")
+    for wf in workflows:
+        routing.check_workflow(wf, n)
+    workflow_names = tuple(w.name for w in workflows)
+    if len(set(workflow_names)) != len(workflow_names):
+        raise ValueError(f"workflow names must be unique: {workflow_names}")
+    stacked_wf = stack_workflows(workflows)  # all widths == n after the check
+
+    if scenarios is None:
+        scenarios = scenario_library(
+            workload.synthetic_rates(n, seed=seed), num_steps, seed
+        )
+    arrivals = jnp.stack(
+        [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
+    )  # (W, S, N)
+
+    reg_names = alloc.policy_names()
+    names = reg_names if policies is None else tuple(policies)
+    pids = jnp.asarray([alloc.policy_id(p) for p in names])
+
+    out = _grid_jit(
+        pids, arrivals, fleet, stacked_wf, config, reg_names, keep_traces,
+        "workflow",
+    )
+    metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
+    traces = out[4] if keep_traces else None
+
+    cost = config.num_gpus * arrivals.shape[1] / 3600.0 * config.price_per_hour
+    return SweepResult(
+        policy_names=names,
+        scenario_names=tuple(s.name for s in scenarios),
+        metrics=metrics,
+        per_agent_latency=per_lat,
+        per_agent_throughput=per_tput,
+        cost=float(cost),
+        config=config,
+        traces=traces,
+        workflow_names=workflow_names,
+        per_agent_queue=per_q,
     )

@@ -88,6 +88,11 @@ def dominated(rates: jnp.ndarray, num_steps: int, agent: int, share: float = 0.9
     rates = jnp.asarray(rates, jnp.float32)
     total = rates.sum()
     n = rates.shape[0]
+    if n < 2:
+        raise ValueError(
+            "dominated needs >= 2 agents: with a single agent there is "
+            f"nobody to redistribute the remaining {1.0 - share:.2f} share to"
+        )
     others = jnp.full((n,), total * (1.0 - share) / (n - 1), jnp.float32)
     new_rates = others.at[agent].set(total * share)
     return constant(new_rates, num_steps)

@@ -10,7 +10,13 @@ The TPU-native reading of "allocate GPU fraction g_i to agent i" (DESIGN.md
      tokens (prefills are charged their prompt length),
   4. steps each agent's batched prefill/decode within its budget,
   5. records the same metrics as the paper's simulator (latency,
-     throughput, allocation, queue length, cost).
+     throughput, allocation, queue length, cost),
+  6. with a ``Workflow`` (``core/routing.py``): routes each *finished*
+     request to its downstream runtimes — the generated tokens become the
+     child request's prompt, fractional routing weights accumulate as
+     credit and spawn whole child requests deterministically, and the
+     children count as next-tick arrivals, exactly like the simulator's
+     endogenous-arrival path.
 
 Runs end-to-end on CPU with reduced configs (examples/serve_fleet.py) —
 the same engine the production launcher would drive per pod.
@@ -27,6 +33,7 @@ import numpy as np
 
 from repro.core import allocator as alloc
 from repro.core.agents import Fleet
+from repro.core.routing import Workflow, check_workflow
 from repro.models.model import ModelApi
 
 
@@ -39,6 +46,7 @@ class Request:
     id: int = -1
     tokens_out: list = dataclasses.field(default_factory=list)
     finish_tick: int = -1
+    parent_id: int = -1          # upstream request that spawned this one
 
 
 @dataclasses.dataclass
@@ -77,28 +85,63 @@ class FleetEngine:
         budget_tokens: int = 64,
         g_total: float = 1.0,
         ema_alpha: float = 0.3,
+        workflow: Workflow | None = None,
     ):
         assert set(fleet.names) == set(runtimes)
         alloc.get_policy(policy)  # fail fast on unregistered policies
+        if workflow is not None:
+            check_workflow(workflow, fleet.num_agents)
         self.fleet = fleet
         self.runtimes = [runtimes[n] for n in fleet.names]
         self.policy = policy
         self.ema_alpha = ema_alpha
         self.budget_tokens = budget_tokens
         self.g_total = g_total
+        self.workflow = workflow
         self.tick = 0
         self._next_id = 0
         self._arrivals_this_tick = np.zeros(fleet.num_agents)
         self._ema = np.zeros(fleet.num_agents)
+        self._ema_seeded = False
+        # Fractional routing credit per (upstream, downstream) pair: whole
+        # child requests spawn when a cell accumulates >= 1.  The routed
+        # weight per finished request is fixed, so it is materialized on
+        # the host once rather than per tick.
+        self._route_credit = np.zeros((fleet.num_agents, fleet.num_agents))
+        self._route_weights = (
+            None if workflow is None else
+            np.asarray(workflow.route, np.float64)
+            * np.asarray(workflow.fan_out, np.float64)[:, None]
+        )
+        self._source_flags = (
+            None if workflow is None else np.asarray(workflow.source, np.float64)
+        )
         self.history: list[dict] = []
         self.completed: list[Request] = []
 
     # -- request intake ------------------------------------------------------
 
-    def submit(self, agent: str, prompt: np.ndarray, max_new_tokens: int):
+    def submit(self, agent: str, prompt: np.ndarray, max_new_tokens: int,
+               parent_id: int = -1):
         idx = self.fleet.names.index(agent)
-        req = Request(agent, np.asarray(prompt, np.int32), max_new_tokens, self.tick,
-                      id=self._next_id)
+        # Same contract as the simulator, which zeroes exogenous arrivals at
+        # non-source agents: outside traffic may only enter at sources.
+        # Routed children (parent_id >= 0) are the endogenous path and land
+        # wherever the matrix sends them.
+        if (self.workflow is not None and parent_id < 0
+                and self._source_flags[idx] == 0.0):
+            raise ValueError(
+                f"agent {agent!r} is not a source of workflow "
+                f"{self.workflow.name!r}; exogenous requests may only enter "
+                "at source agents"
+            )
+        # Routed children are submitted while tick T is still being served
+        # but only become servable (and are counted in lam) at T+1 — stamp
+        # them with their effective arrival, matching the simulator's
+        # endogenous-arrival-at-t+1 semantics.
+        arrival = self.tick + 1 if parent_id >= 0 else self.tick
+        req = Request(agent, np.asarray(prompt, np.int32), max_new_tokens, arrival,
+                      id=self._next_id, parent_id=parent_id)
         self._next_id += 1
         self.runtimes[idx].queue.append(req)
         self._arrivals_this_tick[idx] += 1
@@ -109,12 +152,48 @@ class FleetEngine:
     def _allocate(self, lam: np.ndarray, queues: np.ndarray) -> np.ndarray:
         t = jnp.asarray(self.tick)
         lam_j, q_j = jnp.asarray(lam, jnp.float32), jnp.asarray(queues, jnp.float32)
-        ema_j = alloc.ema_forecast(
-            jnp.asarray(self._ema, jnp.float32), lam_j, self.ema_alpha
-        )
+        # Same EMA semantics as the simulator's scan: seed with the first
+        # observation, update thereafter — at the first tick the policy
+        # sees lam_ema == lam instead of a drifted zero-seeded forecast.
+        if not self._ema_seeded:
+            ema_j = lam_j
+            self._ema_seeded = True
+        else:
+            ema_j = alloc.ema_forecast(
+                jnp.asarray(self._ema, jnp.float32), lam_j, self.ema_alpha
+            )
         self._ema = np.asarray(ema_j)
         g = alloc.dispatch(self.policy, t, lam_j, ema_j, q_j, self.fleet, self.g_total)
         return np.asarray(g)
+
+    # -- workflow routing ----------------------------------------------------
+
+    def _route_finished(self, finished: list[Request]) -> int:
+        """Fan finished requests out to downstream runtimes.
+
+        Each finished request at agent i adds ``route[i] * fan_out[i]`` to
+        the per-edge credit; every whole unit of credit spawns one child
+        request (prompt = the parent's generated tokens) via ``submit``, so
+        children are counted as next-tick arrivals — the engine analogue of
+        the simulator's ``arrivals_endogenous = (served * fan_out) @ route``.
+        """
+        if self.workflow is None or not finished:
+            return 0
+        spawned = 0
+        for req in finished:
+            i = self.fleet.names.index(req.agent)
+            self._route_credit[i] += self._route_weights[i]
+            for j in np.nonzero(self._route_credit[i] >= 1.0)[0]:
+                k = int(self._route_credit[i, j])
+                self._route_credit[i, j] -= k
+                prompt = np.asarray(req.tokens_out, np.int32)
+                if prompt.size == 0:
+                    prompt = req.prompt
+                for _ in range(k):
+                    self.submit(self.fleet.names[j], prompt,
+                                req.max_new_tokens, parent_id=req.id)
+                    spawned += 1
+        return spawned
 
     # -- model stepping ------------------------------------------------------
 
@@ -197,6 +276,7 @@ class FleetEngine:
         )
         g = self._allocate(lam, queues)
         served = np.zeros(len(self.runtimes))
+        done_before = len(self.completed)
         for i, rt in enumerate(self.runtimes):
             budget = int(round(g[i] * self.budget_tokens))
             spent = self._admit(rt, budget)
@@ -206,9 +286,13 @@ class FleetEngine:
                     break
                 spent += made
                 served[i] += made
+        # Requests that finished this tick flow downstream; their children
+        # land in _arrivals_this_tick, i.e. they arrive at tick+1.
+        routed = self._route_finished(self.completed[done_before:])
         self.history.append(
             {"tick": self.tick, "allocation": g.tolist(), "arrivals": lam.tolist(),
-             "queues": queues.tolist(), "decode_tokens": served.tolist()}
+             "queues": queues.tolist(), "decode_tokens": served.tolist(),
+             "routed": routed}
         )
         self.tick += 1
 
@@ -221,7 +305,7 @@ class FleetEngine:
             ls = [r.finish_tick - r.arrival_tick for r in self.completed if r.agent == n]
             per_agent[n] = float(np.mean(ls)) if ls else float("nan")
         toks = sum(len(r.tokens_out) for r in self.completed)
-        return {
+        out = {
             "completed": len(self.completed),
             "avg_latency_ticks": float(np.mean(lat)) if lat else float("nan"),
             "per_agent_latency": per_agent,
@@ -231,6 +315,28 @@ class FleetEngine:
                 [h["allocation"] for h in self.history], axis=0
             ).tolist() if self.history else [],
         }
+        if self.workflow is not None:
+            # End-to-end view: a request finishing at a sink closes the
+            # whole workflow chain that began at its root submission.
+            sink = np.asarray(self.workflow.sink)
+            by_id = {r.id: r for r in self.completed}
+
+            def root(req: Request) -> Request:
+                while req.parent_id >= 0 and req.parent_id in by_id:
+                    req = by_id[req.parent_id]
+                return req
+
+            done = [
+                r for r in self.completed
+                if sink[self.fleet.names.index(r.agent)] > 0
+            ]
+            e2e = [r.finish_tick - root(r).arrival_tick for r in done]
+            out["sink_completed"] = len(done)
+            out["end_to_end_latency_ticks"] = (
+                float(np.mean(e2e)) if e2e else float("nan")
+            )
+            out["routed_requests"] = sum(h.get("routed", 0) for h in self.history)
+        return out
 
 
 def _scatter_slot(caches, caches1, slot: int):

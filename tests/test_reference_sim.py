@@ -4,13 +4,30 @@ import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import allocator as alloc
 from repro.core import workload
 from repro.core.agents import paper_fleet, PAPER_ARRIVAL_RATES
-from repro.core.reference_sim import simulate_numpy
+from repro.core.reference_sim import SUPPORTED_POLICIES, simulate_numpy
 from repro.core.simulator import simulate
 
 FLEET = paper_fleet()
-POLICIES = ("static_equal", "round_robin", "adaptive", "water_filling", "predictive")
+POLICIES = SUPPORTED_POLICIES
+
+
+def test_oracle_covers_the_whole_registry():
+    """Regression: the oracle used to hardcode 5 of the registry's 7
+    entries and raise ValueError on the rest."""
+    assert set(alloc.policy_names()) <= set(SUPPORTED_POLICIES)
+
+
+def test_oracle_rejects_unknown_policy():
+    arr = np.zeros((3, 4))
+    try:
+        simulate_numpy("nope", arr, FLEET)
+    except ValueError as e:
+        assert "nope" in str(e)
+    else:
+        raise AssertionError("expected ValueError")
 
 
 @hypothesis.given(
@@ -23,7 +40,7 @@ def test_scan_matches_numpy_oracle(rates, policy, steps):
     arr = workload.constant(jnp.asarray(rates, jnp.float32), steps)
     tr = simulate(policy, arr, FLEET)
     ref = simulate_numpy(policy, np.asarray(arr), FLEET)
-    for field in ("allocation", "served", "queue", "latency"):
+    for field in ("allocation", "served", "queue", "latency", "completed"):
         got = np.asarray(getattr(tr, field), np.float64)
         np.testing.assert_allclose(got, ref[field], rtol=2e-4, atol=2e-3,
                                    err_msg=f"{policy}/{field}")

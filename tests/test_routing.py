@@ -1,0 +1,427 @@
+"""Workflow-DAG routing tests.
+
+Covers the routing acceptance criteria: ``Workflow`` flows through
+jit/vmap as a pytree, the ``independent`` workflow reproduces the
+pre-routing trajectories **bit-for-bit** under every registered policy,
+requests are conserved end-to-end (exogenous in = completed + in-flight)
+on the fan-out topologies, the JAX scan matches the numpy oracle under
+routing, padded/stacked workflows match their unpadded originals, and the
+(workflow × policy × scenario) sweep grid runs as one vmapped program.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import allocator as alloc
+from repro.core import routing, workload
+from repro.core.agents import PAPER_ARRIVAL_RATES, pad_fleet, paper_fleet
+from repro.core.reference_sim import simulate_numpy
+from repro.core.routing import (
+    Workflow,
+    coordinator_star,
+    hierarchical,
+    independent,
+    pad_workflow,
+    pipeline_chain,
+    stack_workflows,
+    synthetic_workflow,
+)
+from repro.core.simulator import METRIC_NAMES, run_policy, simulate, trace_metrics
+from repro.core.sweep import (
+    Scenario,
+    scenario_library,
+    sweep,
+    sweep_workflows,
+    workflow_scenario_library,
+)
+
+FLEET = paper_fleet()
+RATES = jnp.asarray(PAPER_ARRIVAL_RATES, jnp.float32)
+ARR = workload.constant(RATES, 50)
+
+TOPOLOGIES = (
+    coordinator_star(4),
+    pipeline_chain(4),
+    hierarchical(4),
+    synthetic_workflow(4, seed=3),
+)
+
+
+def _in_flight(tr, wf) -> float:
+    """Backlog + routed-but-not-yet-arrived mass at the end of a trace."""
+    pending = (np.asarray(tr.served[-1]) * np.asarray(wf.fan_out)) @ np.asarray(
+        wf.route
+    )
+    return float(np.asarray(tr.queue[-1]).sum() + pending.sum())
+
+
+class TestWorkflowPytree:
+    def test_flatten_roundtrip(self):
+        wf = hierarchical(4)
+        leaves, treedef = jax.tree_util.tree_flatten(wf)
+        assert len(leaves) == 4  # route + source + sink + fan_out
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert back.name == wf.name
+        np.testing.assert_array_equal(np.asarray(back.route), np.asarray(wf.route))
+
+    def test_jit_passthrough(self):
+        wf = coordinator_star(4)
+        total = jax.jit(lambda w: w.route.sum())(wf)
+        assert abs(float(total) - 1.0) < 1e-6
+
+    def test_vmap_over_stacked_workflows(self):
+        stacked = stack_workflows([independent(4), hierarchical(4)])
+        rowsums = jax.vmap(lambda w: w.route.sum())(stacked)
+        np.testing.assert_allclose(np.asarray(rowsums), [0.0, 3.0], atol=1e-6)
+
+    def test_name_does_not_fragment_the_jit_cache(self):
+        """Same-shape workflows must share one treedef (and so one compiled
+        trace) regardless of their cosmetic name."""
+        t1 = jax.tree_util.tree_structure(synthetic_workflow(4, seed=0))
+        t2 = jax.tree_util.tree_structure(synthetic_workflow(4, seed=1))
+        assert t1 == t2
+        assert synthetic_workflow(4, seed=1).name == "synthetic_s1"
+
+    def test_exit_fraction(self):
+        wf = coordinator_star(4)
+        np.testing.assert_allclose(
+            np.asarray(wf.exit_fraction), [0.0, 1.0, 1.0, 1.0], atol=1e-6
+        )
+
+
+class TestGenerators:
+    @pytest.mark.parametrize("wf", TOPOLOGIES + (independent(4),),
+                             ids=lambda w: w.name)
+    def test_valid(self, wf):
+        wf.validate()
+        route = np.asarray(wf.route)
+        assert (route >= 0).all()
+        assert (route.sum(axis=1) <= 1 + 1e-5).all()
+        # sinks forward nothing
+        assert (route.sum(axis=1) * np.asarray(wf.sink) < 1e-6).all()
+        assert np.asarray(wf.source).sum() >= 1
+
+    def test_independent_is_all_source_all_sink(self):
+        wf = independent(4)
+        np.testing.assert_array_equal(np.asarray(wf.route), 0.0)
+        np.testing.assert_array_equal(np.asarray(wf.source), 1.0)
+        np.testing.assert_array_equal(np.asarray(wf.sink), 1.0)
+
+    def test_star_routes_only_from_coordinator(self):
+        wf = coordinator_star(5, fan_out=3.0)
+        route = np.asarray(wf.route)
+        np.testing.assert_allclose(route[0], [0, 0.25, 0.25, 0.25, 0.25])
+        np.testing.assert_array_equal(route[1:], 0.0)
+        np.testing.assert_allclose(np.asarray(wf.fan_out), [3, 1, 1, 1, 1])
+
+    def test_pipeline_is_a_chain(self):
+        wf = pipeline_chain(4)
+        route = np.asarray(wf.route)
+        assert route[0, 1] == route[1, 2] == route[2, 3] == 1.0
+        assert route.sum() == 3.0
+        np.testing.assert_array_equal(np.asarray(wf.source), [1, 0, 0, 0])
+        np.testing.assert_array_equal(np.asarray(wf.sink), [0, 0, 0, 1])
+
+    def test_synthetic_is_a_dag_and_deterministic(self):
+        a, b = synthetic_workflow(8, seed=5), synthetic_workflow(8, seed=5)
+        np.testing.assert_array_equal(np.asarray(a.route), np.asarray(b.route))
+        # strictly upper-triangular => acyclic
+        assert np.allclose(np.tril(np.asarray(a.route)), 0.0)
+        a.validate()
+
+    def test_validate_rejects_superstochastic_rows(self):
+        wf = Workflow("bad", jnp.full((2, 2), 0.8), jnp.ones(2), jnp.zeros(2),
+                      jnp.ones(2))
+        with pytest.raises(ValueError, match="sum to <= 1"):
+            wf.validate()
+
+    def test_validate_rejects_sourceless_workflows(self):
+        wf = Workflow("bad", jnp.zeros((2, 2)), jnp.zeros(2), jnp.ones(2),
+                      jnp.ones(2))
+        with pytest.raises(ValueError, match="source"):
+            wf.validate()
+
+    def test_validate_rejects_forwarding_sinks(self):
+        route = jnp.zeros((2, 2)).at[1, 0].set(0.5)
+        wf = Workflow("bad", route, jnp.ones(2), jnp.ones(2), jnp.ones(2))
+        with pytest.raises(ValueError, match="sink"):
+            wf.validate()
+
+    def test_size_guards(self):
+        with pytest.raises(ValueError):
+            coordinator_star(1)
+        with pytest.raises(ValueError):
+            hierarchical(2)
+
+    def test_validate_rejects_cycles(self):
+        """Critical-path metrics and engine routing assume a DAG."""
+        route = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])
+        wf = Workflow("cycle", route, jnp.asarray([1.0, 0.0]), jnp.zeros(2),
+                      jnp.ones(2))
+        with pytest.raises(ValueError, match="acyclic"):
+            wf.validate()
+        # self-loops are cycles too
+        route = jnp.asarray([[0.5, 0.5], [0.0, 0.0]])
+        wf = Workflow("self_loop", route, jnp.ones(2), jnp.asarray([0.0, 1.0]),
+                      jnp.ones(2))
+        with pytest.raises(ValueError, match="acyclic"):
+            wf.validate()
+
+
+class TestIndependentIsBitForBitNoOp:
+    """Acceptance criterion: the identity workflow must not change a single
+    bit of any trajectory, for every registered policy."""
+
+    @pytest.mark.parametrize("policy", alloc.policy_names())
+    def test_trajectories_identical(self, policy):
+        arr = workload.poisson(RATES, 60, jax.random.key(1))
+        plain = simulate(policy, arr, FLEET)
+        routed = simulate(policy, arr, FLEET, workflow=independent(4))
+        for field in ("allocation", "served", "queue", "latency", "arrivals",
+                      "completed"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(plain, field)),
+                np.asarray(getattr(routed, field)),
+                err_msg=f"{policy}/{field}",
+            )
+
+    def test_summary_metrics_identical(self):
+        a = run_policy("adaptive", ARR, FLEET)
+        b = run_policy("adaptive", ARR, FLEET, workflow=independent(4))
+        assert a.avg_latency == b.avg_latency
+        assert a.total_throughput == b.total_throughput
+        assert b.sink_throughput == pytest.approx(b.total_throughput, rel=1e-6)
+
+
+class TestConservation:
+    """Exogenous in == completed at sinks + in-flight, on every conserving
+    (fan_out=1) topology."""
+
+    @pytest.mark.parametrize("wf", TOPOLOGIES, ids=lambda w: w.name)
+    @pytest.mark.parametrize("policy", ("adaptive", "static_equal",
+                                        "water_filling"))
+    def test_constant_load(self, wf, policy):
+        tr = simulate(policy, ARR, FLEET, workflow=wf)
+        exo = float(np.asarray(tr.arrivals).sum())
+        comp = float(np.asarray(tr.completed).sum())
+        np.testing.assert_allclose(exo, comp + _in_flight(tr, wf), rtol=1e-4)
+
+    @hypothesis.given(
+        rates=st.lists(st.floats(0, 300), min_size=4, max_size=4),
+        policy=st.sampled_from(("adaptive", "throughput_greedy", "round_robin")),
+        topo=st.sampled_from(range(len(TOPOLOGIES))),
+    )
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_randomized(self, rates, policy, topo):
+        wf = TOPOLOGIES[topo]
+        arr = workload.constant(jnp.asarray(rates, jnp.float32), 30)
+        tr = simulate(policy, arr, FLEET, workflow=wf)
+        exo = float(np.asarray(tr.arrivals).sum())
+        comp = float(np.asarray(tr.completed).sum())
+        np.testing.assert_allclose(
+            exo, comp + _in_flight(tr, wf), rtol=1e-3, atol=0.5
+        )
+
+    def test_fan_out_amplifies(self):
+        """fan_out=2 at the coordinator must double the forwarded mass per
+        served request (the star forwards everything the coordinator
+        serves), so conservation picks up the amplification term."""
+        one = simulate("adaptive", ARR, FLEET, workflow=coordinator_star(4))
+        two = simulate("adaptive", ARR, FLEET,
+                       workflow=coordinator_star(4, fan_out=2.0))
+        routed1 = float(np.asarray(one.served[:, 0]).sum())
+        routed2 = 2.0 * float(np.asarray(two.served[:, 0]).sum())
+        assert routed2 > 1.5 * routed1
+        # amplified traffic leaves more work in the system
+        assert float(np.asarray(two.queue[-1]).sum()) >= \
+            float(np.asarray(one.queue[-1]).sum())
+
+
+class TestOracleParity:
+    """JAX scan vs numpy oracle under routing, full policy registry."""
+
+    @pytest.mark.parametrize("wf", TOPOLOGIES, ids=lambda w: w.name)
+    @pytest.mark.parametrize("policy", alloc.policy_names())
+    def test_scan_matches_oracle(self, wf, policy):
+        arr = workload.constant(RATES, 40)
+        tr = simulate(policy, arr, FLEET, workflow=wf)
+        ref = simulate_numpy(policy, np.asarray(arr), FLEET, workflow=wf)
+        for field in ("allocation", "served", "queue", "latency", "completed"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(tr, field), np.float64), ref[field],
+                rtol=2e-4, atol=5e-3, err_msg=f"{wf.name}/{policy}/{field}",
+            )
+
+
+class TestPaddingConsistency:
+    def test_pad_workflow_keeps_real_routing(self):
+        wf = pad_workflow(hierarchical(4), 7)
+        wf.validate()
+        assert wf.num_agents == 7
+        np.testing.assert_array_equal(
+            np.asarray(wf.route)[:4, :4], np.asarray(hierarchical(4).route)
+        )
+        np.testing.assert_array_equal(np.asarray(wf.route)[4:], 0.0)
+        np.testing.assert_array_equal(np.asarray(wf.route)[:, 4:], 0.0)
+        np.testing.assert_array_equal(np.asarray(wf.source)[4:], 0.0)
+
+    def test_pad_below_size_raises(self):
+        with pytest.raises(ValueError):
+            pad_workflow(hierarchical(4), 3)
+
+    @pytest.mark.parametrize("wf", TOPOLOGIES, ids=lambda w: w.name)
+    def test_padded_simulation_matches_unpadded(self, wf):
+        """pad_fleet + pad_workflow together must reproduce the unpadded
+        trajectories on the real slots and keep padding perfectly inert."""
+        padded_fleet = pad_fleet(FLEET, 9)
+        padded_wf = pad_workflow(wf, 9)
+        arr_p = jnp.pad(ARR, ((0, 0), (0, 5)))
+        for policy in ("adaptive", "water_filling"):
+            a = simulate(policy, ARR, FLEET, workflow=wf)
+            b = simulate(policy, arr_p, padded_fleet, workflow=padded_wf)
+            for field in ("served", "queue", "completed"):
+                np.testing.assert_allclose(
+                    np.asarray(getattr(a, field)),
+                    np.asarray(getattr(b, field))[:, :4],
+                    rtol=2e-3, atol=5e-2, err_msg=f"{wf.name}/{policy}/{field}",
+                )
+            assert (np.asarray(b.served)[:, 4:] == 0.0).all()
+            assert (np.asarray(b.queue)[:, 4:] == 0.0).all()
+
+    def test_route_into_padded_slot_is_dropped(self):
+        """A workflow whose route targets an inactive slot must not wake
+        the padding: the endogenous gate drops the misrouted mass, so the
+        padded slot stays at zero queue/served and active agents keep
+        their capacity."""
+        padded_fleet = pad_fleet(FLEET, 8)
+        wf = pipeline_chain(8)  # route[3, 4] forwards into padding
+        arr_p = jnp.pad(ARR, ((0, 0), (0, 4)))
+        tr = simulate("water_filling", arr_p, padded_fleet, workflow=wf)
+        assert (np.asarray(tr.queue)[:, 4:] == 0.0).all()
+        assert (np.asarray(tr.served)[:, 4:] == 0.0).all()
+        assert (np.asarray(tr.allocation)[:, 4:] == 0.0).all()
+
+    def test_stack_workflows_pads_to_widest(self):
+        stacked = stack_workflows([pipeline_chain(3), hierarchical(5)])
+        assert stacked.num_agents == 5
+        assert np.asarray(stacked.route).shape == (2, 5, 5)
+        np.testing.assert_allclose(
+            np.asarray(stacked.source).sum(axis=1), [1.0, 1.0]
+        )
+
+
+class TestWorkflowMetrics:
+    def test_sink_throughput_counts_exits_only(self):
+        wf = pipeline_chain(4)
+        tr = simulate("static_equal", ARR, FLEET, workflow=wf)
+        vec, _, _, _ = trace_metrics(tr, FLEET.active, wf)
+        m = dict(zip(METRIC_NAMES, np.asarray(vec)))
+        # only the tail stage exits; total throughput counts every stage
+        assert m["sink_throughput"] < m["total_throughput"]
+        per_step_exits = np.asarray(tr.completed).sum(axis=1)
+        np.testing.assert_allclose(
+            m["sink_throughput"], per_step_exits.mean(), rtol=1e-5
+        )
+
+    def test_critical_path_exceeds_max_stage_latency_on_chain(self):
+        wf = pipeline_chain(4)
+        tr = simulate("static_equal", ARR, FLEET, workflow=wf)
+        vec, per_lat, _, _ = trace_metrics(tr, FLEET.active, wf)
+        m = dict(zip(METRIC_NAMES, np.asarray(vec)))
+        # the chain's critical path is the sum of all stage latencies
+        np.testing.assert_allclose(
+            m["critical_path_latency"], np.asarray(per_lat).sum(), rtol=1e-4
+        )
+        assert m["critical_path_latency"] >= np.asarray(per_lat).max() - 1e-5
+
+    def test_per_agent_queue_exposed(self):
+        s = run_policy("adaptive", ARR, FLEET, workflow=pipeline_chain(4))
+        assert len(s.per_agent_queue) == 4
+        assert all(q >= 0 for q in s.per_agent_queue)
+
+
+class TestSweepWorkflows:
+    @pytest.fixture(scope="class")
+    def grid(self):
+        scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=30, seed=0)
+        workflows = workflow_scenario_library(4, seed=0)
+        return workflows, scenarios, sweep_workflows(
+            FLEET, workflows, scenarios, keep_traces=True
+        )
+
+    def test_grid_shape(self, grid):
+        workflows, scenarios, res = grid
+        K, P, W = len(workflows), len(alloc.policy_names()), len(scenarios)
+        assert K >= 3  # acceptance: >= 3 topologies in one program
+        assert res.metrics.shape == (K, P, W, len(METRIC_NAMES))
+        assert np.isfinite(res.metrics).all()
+        assert res.workflow_names == tuple(w.name for w in workflows)
+        assert res.per_agent_queue.shape == (K, P, W, 4)
+
+    def test_independent_row_matches_plain_sweep(self, grid):
+        workflows, scenarios, res = grid
+        plain = sweep(FLEET, scenarios)
+        k = res.workflow_names.index("independent")
+        np.testing.assert_allclose(
+            res.metrics[k], plain.metrics, rtol=1e-4, atol=1e-3
+        )
+
+    def test_table_and_best_carry_workflow_axis(self, grid):
+        workflows, scenarios, res = grid
+        table = res.table()
+        assert table.columns[0] == "workflow"
+        assert len(table.rows) == (
+            len(workflows) * len(res.policy_names) * len(scenarios)
+        )
+        best = table.best("critical_path_latency")
+        assert set(best) == {
+            f"{wn}/{sc}" for wn in res.workflow_names for sc in res.scenario_names
+        }
+
+    def test_summary_requires_workflow_on_batched_grid(self, grid):
+        _, _, res = grid
+        with pytest.raises(ValueError):
+            res.summary("adaptive", "constant")
+        with pytest.raises(ValueError):
+            res.summary("adaptive", "constant", fleet="independent")
+        s = res.summary("adaptive", "constant", workflow="hierarchical")
+        assert np.isfinite(s.critical_path_latency)
+
+    def test_padded_grid_matches_unpadded(self):
+        """Acceptance: mask-consistent padded/stacked results — the same
+        workflow grid on a padded fleet + padded workflows reproduces the
+        unpadded metrics."""
+        scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=25, seed=0)
+        workflows = workflow_scenario_library(4, seed=0)
+        res = sweep_workflows(FLEET, workflows, scenarios)
+
+        padded_fleet = pad_fleet(FLEET, 6)
+        padded_wfs = [pad_workflow(w, 6) for w in workflows]
+        padded_scen = tuple(
+            Scenario(s.name, jnp.pad(s.arrivals, ((0, 0), (0, 2))))
+            for s in scenarios
+        )
+        res_p = sweep_workflows(padded_fleet, padded_wfs, padded_scen)
+        np.testing.assert_allclose(
+            res.metrics, res_p.metrics, rtol=2e-3, atol=5e-2
+        )
+
+    def test_workflow_width_mismatch_raises(self):
+        with pytest.raises(ValueError, match="agents"):
+            sweep_workflows(FLEET, [hierarchical(6)],
+                            scenario_library(PAPER_ARRIVAL_RATES, num_steps=5))
+
+    def test_batched_workflow_rejected_by_unbatched_entry_points(self):
+        """A stacked workflow must only flow through sweep_workflows' vmap;
+        simulate() would die deep inside the scan otherwise."""
+        stacked = stack_workflows([independent(4), hierarchical(4)])
+        with pytest.raises(ValueError, match="batched"):
+            simulate("adaptive", ARR, FLEET, workflow=stacked)
+
+    def test_duplicate_workflow_names_raise(self):
+        with pytest.raises(ValueError, match="unique"):
+            sweep_workflows(FLEET, [independent(4), independent(4)],
+                            scenario_library(PAPER_ARRIVAL_RATES, num_steps=5))

@@ -1,10 +1,12 @@
 """Serving-engine integration: the paper's allocator driving real models."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.core import allocator as alloc
+from repro.core import routing
 from repro.core.agents import AgentSpec, Fleet
 from repro.models.model import build_model
 from repro.serving.engine import AgentRuntime, FleetEngine
@@ -63,14 +65,107 @@ def test_engine_rejects_unknown_policy():
         _engine("not_a_policy")
 
 
-def test_engine_ema_uses_configured_alpha():
+def test_engine_ema_seeds_then_updates_with_configured_alpha():
+    """Same EMA semantics as the simulator's scan: the first observation
+    seeds the forecast (no drift from a zero seed), later ticks apply one
+    ``ema_forecast`` update each."""
     eng = _engine("predictive", budget_tokens=16, ema_alpha=0.5)
     eng.submit("fast", np.arange(4), 1)
     eng.step()
-    # zeros seed + one update: ema = alpha * lam
-    np.testing.assert_allclose(eng._ema, [0.5, 0.0], atol=1e-6)
+    # seeded with the first observation, not updated from zeros
+    np.testing.assert_allclose(eng._ema, [1.0, 0.0], atol=1e-6)
     eng.step()
-    np.testing.assert_allclose(eng._ema, [0.25, 0.0], atol=1e-6)
+    # one update away from the seed: 0.5 * 0 + 0.5 * 1
+    np.testing.assert_allclose(eng._ema, [0.5, 0.0], atol=1e-6)
+
+
+def test_engine_tick0_allocation_matches_dispatch_with_seeded_ema():
+    """Regression: tick-0 allocation must equal ``alloc.dispatch`` with
+    ``lam_ema == lam`` — the engine used to run the EMA update against a
+    zero seed, so EMA-driven policies drifted from the simulator at t=0."""
+    eng = _engine("predictive", budget_tokens=16)
+    eng.submit("fast", np.arange(4), 1)
+    eng.submit("fast", np.arange(4), 1)
+    eng.step()
+    lam = jnp.asarray([2.0, 0.0], jnp.float32)
+    q = jnp.asarray([2.0, 0.0], jnp.float32)
+    expect = np.asarray(
+        alloc.dispatch("predictive", jnp.asarray(0), lam, lam, q,
+                       eng.fleet, eng.g_total)
+    )
+    np.testing.assert_allclose(eng.history[0]["allocation"], expect, atol=1e-6)
+    np.testing.assert_allclose(eng._ema, np.asarray(lam), atol=1e-6)
+
+
+class TestWorkflowRouting:
+    def test_finished_requests_flow_downstream(self):
+        """coordinator_star(2): every request finished at the coordinator
+        spawns one child at the specialist, prompt = generated tokens."""
+        wf = routing.coordinator_star(2)
+        eng = _engine("adaptive", workflow=wf)
+        rng = np.random.default_rng(0)
+        for t in range(14):
+            if t < 5:
+                eng.submit("fast", rng.integers(0, 50, 6), max_new_tokens=3)
+            eng.step()
+        m = eng.metrics()
+        assert m["routed_requests"] > 0
+        slow_done = [r for r in eng.completed if r.agent == "slow"]
+        assert slow_done, "specialist never completed a routed request"
+        by_id = {r.id: r for r in eng.completed}
+        for r in slow_done:
+            assert r.parent_id >= 0
+            parent = by_id[r.parent_id]
+            assert parent.agent == "fast"
+            # children arrive the tick after the parent finished
+            assert r.arrival_tick == parent.finish_tick + 1
+            np.testing.assert_array_equal(r.prompt, np.asarray(parent.tokens_out))
+        assert m["sink_completed"] == len(slow_done)
+        assert m["end_to_end_latency_ticks"] >= m["avg_latency_ticks"]
+
+    def test_fractional_credit_accumulates(self):
+        """With route weight 1/2 per edge, children spawn every second
+        finished request — deterministically, with no mass lost."""
+        wf = routing.coordinator_star(3)  # route[0, 1:] = 0.5 each
+        fleet = Fleet.from_specs([
+            AgentSpec("fast", 100.0, 100.0, 0.2, 1),
+            AgentSpec("slow", 500.0, 20.0, 0.3, 2),
+            AgentSpec("slow2", 500.0, 20.0, 0.3, 2),
+        ])
+        key = jax.random.key(0)
+        rts = {}
+        for name, arch in (("fast", "minitron-4b"), ("slow", "mamba2-370m"),
+                           ("slow2", "mamba2-370m")):
+            cfg = get_config(arch, reduced=True)
+            api = build_model(cfg)
+            rts[name] = AgentRuntime(name, api, api.init(key), max_len=48,
+                                     batch_slots=2)
+        eng = FleetEngine(fleet, rts, policy="adaptive", budget_tokens=32,
+                          workflow=wf)
+        rng = np.random.default_rng(1)
+        for t in range(16):
+            if t < 6:
+                eng.submit("fast", rng.integers(0, 50, 5), max_new_tokens=3)
+            eng.step()
+        done_fast = [r for r in eng.completed if r.agent == "fast"]
+        m = eng.metrics()
+        # every two finished coordinator requests spawn one child per edge
+        expect = 2 * (len(done_fast) // 2)
+        assert m["routed_requests"] in (expect, expect + 1, expect + 2)
+
+    def test_workflow_width_mismatch_raises(self):
+        with pytest.raises(ValueError, match="agents"):
+            _engine("adaptive", workflow=routing.coordinator_star(3))
+
+    def test_exogenous_submit_to_non_source_raises(self):
+        """The simulator zeroes exogenous arrivals at non-source agents;
+        the engine must enforce the same contract instead of silently
+        serving traffic the model says cannot exist."""
+        eng = _engine("adaptive", workflow=routing.coordinator_star(2))
+        with pytest.raises(ValueError, match="source"):
+            eng.submit("slow", np.arange(4), 2)
+        # sources still accept outside traffic
+        eng.submit("fast", np.arange(4), 2)
 
 
 def test_allocation_capacity_every_tick():

@@ -116,3 +116,16 @@ class TestInvariants:
     def test_latency_cap_respected(self):
         tr = simulate("round_robin", ARR, FLEET)
         assert float(np.asarray(tr.latency).max()) <= SimConfig().latency_cap
+
+    def test_dominated_single_agent_raises(self):
+        """Regression: n=1 used to divide by zero (n-1) and emit nan rates
+        instead of failing loudly."""
+        with pytest.raises(ValueError, match=">= 2 agents"):
+            workload.dominated(jnp.asarray([80.0]), 10, agent=0)
+
+    def test_dominated_two_agents_still_works(self):
+        arr = np.asarray(workload.dominated(jnp.asarray([80.0, 40.0]), 5,
+                                            agent=0, share=0.9))
+        assert np.isfinite(arr).all()
+        np.testing.assert_allclose(arr[0].sum(), 120.0, rtol=1e-5)
+        np.testing.assert_allclose(arr[0, 0], 108.0, rtol=1e-5)
