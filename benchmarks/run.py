@@ -21,6 +21,7 @@ from benchmarks import (
     fleet_scaling,
     robustness,
     roofline,
+    serverless_elasticity,
     serving_engine,
     sweep_grid,
     table2_metrics,
@@ -33,6 +34,7 @@ MODULES = (
     ("robustness", robustness),
     ("sweep_grid", sweep_grid),
     ("workflow_topologies", workflow_topologies),
+    ("serverless_elasticity", serverless_elasticity),
     ("allocator_scaling", allocator_scaling),
     ("fleet_scaling", fleet_scaling),
     ("roofline", roofline),

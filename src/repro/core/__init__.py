@@ -24,8 +24,20 @@ from repro.core.allocator import (
     throughput_greedy,
     water_filling,
 )
+from repro.core import capacity
 from repro.core import routing
 from repro.core import workload
+from repro.core.capacity import (
+    CapacityConfig,
+    CapacityState,
+    billing_cost,
+    capacity_config,
+    capacity_policy_id,
+    capacity_policy_names,
+    check_capacity,
+    register_capacity_policy,
+    stack_capacities,
+)
 from repro.core.objective import ObjectiveWeights, step_objective
 from repro.core.routing import (
     Workflow,
@@ -52,9 +64,11 @@ from repro.core.sweep import (
     Scenario,
     SweepResult,
     SweepSummary,
+    capacity_scenario_library,
     fleet_scenario_library,
     scenario_library,
     sweep,
+    sweep_capacity,
     sweep_fleets,
     sweep_workflows,
     workflow_scenario_library,
@@ -75,6 +89,10 @@ __all__ = [
     "independent_workflow", "pad_workflow", "pipeline_chain",
     "stack_workflows", "synthetic_workflow", "sweep_workflows",
     "workflow_scenario_library",
+    "capacity", "CapacityConfig", "CapacityState", "billing_cost",
+    "capacity_config", "capacity_policy_id", "capacity_policy_names",
+    "check_capacity", "register_capacity_policy", "stack_capacities",
+    "sweep_capacity", "capacity_scenario_library",
 ]
 
 

@@ -20,6 +20,13 @@ module) under a uniform signature
 
     (t, lam_obs, lam_ema, queue, fleet, g_total) -> g
 
+``g_total`` may be a static python float (the provisioned budget) **or a
+traced scalar**: under the serverless capacity layer (``core/capacity.py``)
+the budget is the warm-pool trajectory ``g_total(t) = warm(t)``, including
+exact zeros when the pool scales to zero — every registry entry must (and
+does) emit Σ g <= g_total(t) and g >= 0 for any time-varying traced budget
+(property-tested in tests/test_policy_invariants.py).
+
 Under workflow routing (``core/routing.py``) ``lam_obs`` is the agent's
 *total* intake — exogenous arrivals plus requests routed from upstream
 agents — and ``queue`` carries any backlog of routed traffic, so

@@ -1,0 +1,380 @@
+"""Serverless capacity layer: discrete warm-pool autoscaling with cold starts.
+
+The paper's setting is *serverless* GPU platforms, yet a naive reproduction
+models a permanently provisioned device: the allocator's budget ``g_total``
+is a constant and cost is ``num_gpus · duration · price`` — identical across
+every policy, so the paper's cost-efficiency claims are vacuous.  This module
+makes capacity itself dynamic: ``g_total(t)`` becomes the traced output of a
+**warm-pool autoscaler** over discrete instances, and billing switches from
+provisioned-seconds to **warm-instance-seconds**, so cost finally differs
+across allocation policies, capacity policies, workloads, and topologies.
+
+Semantics (threaded identically through ``simulator.simulate_core``, the
+numpy oracle ``reference_sim.simulate_numpy``, and the serving engine
+``serving/engine.py``):
+
+* The pool holds ``warm`` instances (each contributes 1.0 to the allocator's
+  budget: ``g_total(t) = warm(t)``) plus ``pending`` instances still cold.
+* Every step a registered **capacity policy** observes the fleet-wide state
+  (total intake, its EMA forecast, total backlog, idle time) and returns a
+  desired warm count.  Scale-down is instantaneous; scale-up requests enter
+  a cold-start pipeline and serve nothing for ``round(cold_start_s)`` steps
+  (in-flight instances cannot be cancelled — they warm up and are trimmed by
+  the next scale-down decision, exactly like real serverless pools).
+* ``SimConfig.num_gpus`` is the **instance ceiling**: no capacity policy may
+  exceed it, and static budgets are rejected when ``g_total > num_gpus``.
+
+Registered capacity policies (the registry mirrors the allocation-policy
+registry in ``core/allocator.py`` — a traced integer id dispatched with
+``lax.switch``, so a *batched capacity axis* is plain ``vmap`` over a
+``stack_capacities`` pytree, see ``core/sweep.py::sweep_capacity``):
+
+* ``fixed``         — always-on pool of exactly ``g_total`` instances; with
+                      ``cold_start_s = 0`` this reproduces the pre-capacity
+                      static-budget trajectories **bit-for-bit** (the no-op
+                      guarantee, regression-tested for every allocation
+                      policy in tests/test_capacity.py).
+* ``reactive``      — queue/rate-threshold scaling: enough instances to
+                      absorb the EMA arrival rate at
+                      ``target_rate_per_instance`` rps each, plus one extra
+                      instance per ``backlog_per_instance`` queued requests,
+                      floored at ``min_instances``.
+* ``scale_to_zero`` — the reactive rule with a keep-alive window: while any
+                      demand (intake or backlog) is present the pool keeps
+                      at least one instance; once the fleet has been idle
+                      longer than ``keep_alive_s`` the pool drops to zero
+                      and billing stops entirely.
+
+``billing_cost`` is the single billing formula for the whole codebase
+(simulator metrics, sweep grids, the serving engine): instance-seconds →
+dollars.  The pre-capacity code triplicated ``num_gpus · steps / 3600 ·
+price`` across simulator.py and three sweep call sites; every path now
+funnels through this helper with warm-instance-seconds as the input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-9
+
+# Static length of the cold-start delay line: one slot per whole second a
+# requested instance can still be cold.  ``cold_start_s`` is validated
+# against this bound eagerly (check_capacity) so the traced scatter below
+# never silently clips a longer delay.
+COLD_START_HORIZON = 32
+
+
+def billing_cost(instance_seconds, price_per_hour: float):
+    """Dollars for ``instance_seconds`` of warm capacity — THE billing
+    formula (jnp-safe: traced instance-seconds bill inside jit).
+
+    Provisioned billing is the special case ``instance_seconds =
+    num_gpus · duration``; serverless billing passes ``Σ_t warm(t) · 1 s``.
+    """
+    return instance_seconds / 3600.0 * price_per_hour
+
+
+def check_budget_ceiling(g_total: float, num_gpus: float) -> None:
+    """THE ceiling invariant: a static budget that could never be
+    provisioned under its own instance ceiling is a config error.  Shared
+    by ``SimConfig``, ``check_capacity`` and the serving engine."""
+    if g_total > num_gpus:
+        raise ValueError(
+            f"g_total={g_total} exceeds the instance ceiling num_gpus={num_gpus}"
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CapacityConfig:
+    """One capacity policy + its knobs, as a registered pytree.
+
+    Every field (including the policy selector) is a scalar *leaf*, so a
+    list of heterogeneous configs stacks into one batched pytree
+    (``stack_capacities``) and the whole capacity axis vmaps through the
+    sweep grid; ``name`` is display-only static aux data.
+    """
+
+    policy_id: jnp.ndarray                 # () int32, capacity-registry index
+    cold_start_s: jnp.ndarray              # () f32, seconds pending before warm
+    keep_alive_s: jnp.ndarray              # () f32, idle window (scale_to_zero)
+    target_rate_per_instance: jnp.ndarray  # () f32, rps one instance absorbs
+    backlog_per_instance: jnp.ndarray      # () f32, queued reqs per extra instance
+    min_instances: jnp.ndarray             # () f32, reactive floor
+    name: str = "capacity"
+
+    def tree_flatten(self):
+        return (
+            (self.policy_id, self.cold_start_s, self.keep_alive_s,
+             self.target_rate_per_instance, self.backlog_per_instance,
+             self.min_instances),
+            self.name,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, name, children):
+        return cls(*children, name=name)
+
+    @property
+    def policy(self) -> str:
+        """Registry name of the selected capacity policy (host-side)."""
+        pid = np.asarray(self.policy_id)
+        if pid.ndim != 0:
+            raise ValueError(
+                f"config {self.name!r} is a stacked batch of {pid.shape[0]} "
+                "policies; index the batch (or keep the unstacked configs) "
+                "to read a single policy name"
+            )
+        return capacity_policy_names()[int(pid)]
+
+
+def capacity_config(
+    policy: str = "fixed",
+    *,
+    cold_start_s: float = 0.0,
+    keep_alive_s: float = 10.0,
+    target_rate_per_instance: float = 60.0,
+    backlog_per_instance: float = 50.0,
+    min_instances: float = 0.0,
+    name: str | None = None,
+) -> CapacityConfig:
+    """Build a ``CapacityConfig`` by capacity-policy name.
+
+    Defaults are sized for the paper fleet: one instance serves ~60 rps
+    (Table II's aggregate throughput at g = 1), and ~50 queued requests
+    justify warming an extra instance.
+    """
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    return CapacityConfig(
+        policy_id=jnp.asarray(capacity_policy_id(policy), jnp.int32),
+        cold_start_s=f32(cold_start_s),
+        keep_alive_s=f32(keep_alive_s),
+        target_rate_per_instance=f32(target_rate_per_instance),
+        backlog_per_instance=f32(backlog_per_instance),
+        min_instances=f32(min_instances),
+        name=policy if name is None else name,
+    )
+
+
+def check_capacity(cap: CapacityConfig, g_total: float, num_gpus: float) -> None:
+    """Eager (outside-jit) sanity constraints for one config or a stacked
+    batch of configs (leaves may carry a leading capacity axis)."""
+    cold = np.asarray(cap.cold_start_s)
+    if (cold < 0).any() or (cold > COLD_START_HORIZON - 1).any():
+        raise ValueError(
+            f"cold_start_s must be in [0, {COLD_START_HORIZON - 1}] "
+            f"(COLD_START_HORIZON), got {cold}"
+        )
+    if (np.asarray(cap.keep_alive_s) < 0).any():
+        raise ValueError(f"keep_alive_s must be >= 0: {np.asarray(cap.keep_alive_s)}")
+    if (np.asarray(cap.target_rate_per_instance) <= 0).any():
+        raise ValueError("target_rate_per_instance must be positive")
+    if (np.asarray(cap.backlog_per_instance) <= 0).any():
+        raise ValueError("backlog_per_instance must be positive")
+    mins = np.asarray(cap.min_instances)
+    if (mins < 0).any() or (mins > num_gpus).any():
+        raise ValueError(
+            f"min_instances must be in [0, num_gpus={num_gpus}]: {mins}"
+        )
+    check_budget_ceiling(g_total, num_gpus)
+
+
+def stack_capacities(caps: Sequence[CapacityConfig]) -> CapacityConfig:
+    """Stack configs on a new leading capacity axis: every leaf becomes
+    (C,), ready for ``vmap`` (``core/sweep.py::sweep_capacity``).  Stacked
+    field-wise rather than via ``tree_map`` so per-config display names
+    (static aux data) are allowed to differ."""
+    caps = list(caps)
+    if not caps:
+        raise ValueError("stack_capacities needs at least one config")
+    stack = lambda field: jnp.stack([getattr(c, field) for c in caps])
+    return CapacityConfig(
+        policy_id=stack("policy_id"),
+        cold_start_s=stack("cold_start_s"),
+        keep_alive_s=stack("keep_alive_s"),
+        target_rate_per_instance=stack("target_rate_per_instance"),
+        backlog_per_instance=stack("backlog_per_instance"),
+        min_instances=stack("min_instances"),
+        name="stacked",
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CapacityState:
+    """The warm pool's scan-carry state.
+
+    ``pipeline[k]`` is the number of requested instances that become warm in
+    ``k`` steps (a fixed-length delay line of cohorts); ``idle_s`` counts
+    consecutive seconds with zero fleet-wide demand (the keep-alive clock).
+    """
+
+    warm: jnp.ndarray      # () f32, serving instances
+    pipeline: jnp.ndarray  # (COLD_START_HORIZON,) f32, cold cohorts
+    idle_s: jnp.ndarray    # () f32
+
+    def tree_flatten(self):
+        return (self.warm, self.pipeline, self.idle_s), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_capacity_state(g_total: float) -> CapacityState:
+    """The pool at t=0: the provisioned baseline is already warm (the
+    ``fixed`` policy therefore never transitions — the no-op guarantee)."""
+    return CapacityState(
+        warm=jnp.asarray(g_total, jnp.float32),
+        pipeline=jnp.zeros((COLD_START_HORIZON,), jnp.float32),
+        idle_s=jnp.zeros((), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Capacity-policy registry — mirrors the allocation-policy registry.
+#
+# Uniform signature:
+#   (t, lam_tot, lam_ema_tot, queue_tot, warm, pending, idle_s,
+#    cap, g_total, num_gpus) -> desired warm count (traced scalar)
+# ---------------------------------------------------------------------------
+
+CapacityPolicyFn = Callable[..., jnp.ndarray]
+
+_CAP_REGISTRY: dict[str, CapacityPolicyFn] = {}
+
+
+def register_capacity_policy(name: str) -> Callable[[CapacityPolicyFn], CapacityPolicyFn]:
+    def deco(fn: CapacityPolicyFn) -> CapacityPolicyFn:
+        if name in _CAP_REGISTRY:
+            raise ValueError(f"capacity policy {name!r} already registered")
+        _CAP_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def capacity_policy_names() -> tuple[str, ...]:
+    """All registered capacity policies, in registration (= id) order."""
+    return tuple(_CAP_REGISTRY)
+
+
+def capacity_policy_id(name: str) -> int:
+    if name not in _CAP_REGISTRY:
+        raise ValueError(
+            f"unknown capacity policy {name!r}; registered: "
+            f"{capacity_policy_names()}"
+        )
+    return capacity_policy_names().index(name)
+
+
+def capacity_switch(
+    policy_id: jnp.ndarray,
+    t: jnp.ndarray,
+    lam_tot: jnp.ndarray,
+    lam_ema_tot: jnp.ndarray,
+    queue_tot: jnp.ndarray,
+    warm: jnp.ndarray,
+    pending: jnp.ndarray,
+    idle_s: jnp.ndarray,
+    cap: CapacityConfig,
+    g_total: float,
+    num_gpus: float,
+) -> jnp.ndarray:
+    """Traced dispatch over the capacity registry (``lax.switch``)."""
+    branches = tuple(
+        (lambda fn=fn: fn(t, lam_tot, lam_ema_tot, queue_tot, warm, pending,
+                          idle_s, cap, g_total, num_gpus))
+        for fn in _CAP_REGISTRY.values()
+    )
+    return jax.lax.switch(policy_id, branches)
+
+
+def _reactive_desired(lam_ema_tot, queue_tot, cap):
+    """Discrete queue/rate-threshold rule shared by the elastic policies:
+    whole instances for the forecast rate, whole extra instances for the
+    standing backlog."""
+    rate_need = jnp.ceil(
+        lam_ema_tot / jnp.maximum(cap.target_rate_per_instance, _EPS)
+    )
+    backlog_boost = jnp.floor(
+        queue_tot / jnp.maximum(cap.backlog_per_instance, _EPS)
+    )
+    return rate_need + backlog_boost
+
+
+@register_capacity_policy("fixed")
+def _fixed(t, lam_tot, lam_ema_tot, queue_tot, warm, pending, idle_s, cap,
+           g_total, num_gpus):
+    """Always-on provisioned pool — the pre-capacity static budget."""
+    return jnp.asarray(g_total, jnp.float32)
+
+
+@register_capacity_policy("reactive")
+def _reactive(t, lam_tot, lam_ema_tot, queue_tot, warm, pending, idle_s, cap,
+              g_total, num_gpus):
+    desired = _reactive_desired(lam_ema_tot, queue_tot, cap)
+    return jnp.clip(desired, cap.min_instances, num_gpus)
+
+
+@register_capacity_policy("scale_to_zero")
+def _scale_to_zero(t, lam_tot, lam_ema_tot, queue_tot, warm, pending, idle_s,
+                   cap, g_total, num_gpus):
+    """Reactive scaling that releases the whole pool after ``keep_alive_s``
+    idle seconds; while any demand is present the busy-path floor is
+    ``max(min_instances, 1)`` — the configured reactive floor still binds,
+    scale-to-zero only overrides it once the keep-alive window expires."""
+    desired = _reactive_desired(lam_ema_tot, queue_tot, cap)
+    floor = jnp.maximum(cap.min_instances, 1.0)
+    active_desired = jnp.clip(desired, floor, num_gpus)
+    return jnp.where(idle_s <= cap.keep_alive_s, active_desired, 0.0)
+
+
+def capacity_step(
+    state: CapacityState,
+    cap: CapacityConfig,
+    t: jnp.ndarray,
+    lam_tot: jnp.ndarray,
+    lam_ema_tot: jnp.ndarray,
+    queue_tot: jnp.ndarray,
+    g_total: float,
+    num_gpus: float,
+) -> tuple[CapacityState, jnp.ndarray, jnp.ndarray]:
+    """One autoscaler tick; returns ``(new_state, warm, pending)`` where
+    ``warm`` is the step's allocator budget ``g_total(t)``.
+
+    Order within a step: (1) cohorts whose cold start elapsed become warm,
+    (2) the idle clock advances, (3) the capacity policy picks a desired
+    count, (4) scale-down is instantaneous, (5) missing instances (beyond
+    warm + pending) are requested and enter the delay line at
+    ``round(cold_start_s)`` — a zero cold start serves the same step.
+    """
+    warm = state.warm + state.pipeline[0]
+    pipeline = jnp.concatenate([state.pipeline[1:], jnp.zeros((1,), jnp.float32)])
+    busy = (lam_tot + queue_tot) > 0
+    idle_s = jnp.where(busy, 0.0, state.idle_s + 1.0)
+    pending = pipeline.sum()
+    desired = capacity_switch(
+        cap.policy_id, t, lam_tot, lam_ema_tot, queue_tot, warm, pending,
+        idle_s, cap, g_total, num_gpus,
+    )
+    warm = jnp.minimum(warm, desired)
+    request = jnp.maximum(desired - (warm + pending), 0.0)
+    delay = jnp.clip(
+        jnp.round(cap.cold_start_s), 0, COLD_START_HORIZON - 1
+    ).astype(jnp.int32)
+    direct = jnp.where(delay == 0, request, 0.0)
+    warm = warm + direct
+    # Slot k is consumed at the start of step t+k+1, so a d-second cold
+    # start lands in slot d-1 (d = 0 was served directly above).
+    slot = jnp.maximum(delay - 1, 0)
+    pipeline = pipeline + jax.nn.one_hot(
+        slot, COLD_START_HORIZON, dtype=jnp.float32
+    ) * (request - direct)
+    new_state = CapacityState(warm=warm, pipeline=pipeline, idle_s=idle_s)
+    return new_state, warm, pipeline.sum()

@@ -27,13 +27,23 @@ def step_objective(
     weights: ObjectiveWeights = ObjectiveWeights(),
     price_per_second: float = 0.0002,
     latency_cap: float = 1000.0,
+    warm_instances: jnp.ndarray | float = 1.0,
 ) -> jnp.ndarray:
-    """One-step value of Eq. (2) for allocation g at state (queue, lam)."""
+    """One-step value of Eq. (2) for allocation g at state (queue, lam).
+
+    ``warm_instances`` lets a caller price the step's warm-pool size
+    (``SimTrace.warm``) into the cost term — warm-instance-seconds billing
+    instead of a constant.  Nothing in the allocation path passes it (the
+    allocator optimizes latency/throughput only; capacity decisions live in
+    ``core/capacity.py``); the default of 1.0 is the paper's provisioned
+    single-device setting, where the cost term is constant across
+    allocations.
+    """
     capacity = g * base_throughput
     served = jnp.minimum(capacity, queue + lam)
     new_queue = queue + lam - served
     latency = jnp.minimum(new_queue / jnp.maximum(capacity, _EPS), latency_cap)
     l_term = latency.mean()
-    c_term = price_per_second  # provisioned device: constant across g
+    c_term = price_per_second * warm_instances  # warm-instance-seconds billing
     h_term = served.sum()
     return weights.alpha * l_term + weights.beta * c_term - weights.gamma * h_term

@@ -10,12 +10,24 @@ loop is re-derived here with a hand-written analytic gradient rather than
 exogenous arrivals feed only source agents and each step's served requests
 are forwarded into downstream queues for the next step, exactly as in
 ``simulator.simulate_core``.
+
+The serverless capacity layer (``core/capacity.py``) is re-implemented here
+as an explicit python loop over the warm pool: cohorts leave a plain list
+delay line, the idle clock and the keep-alive window are straight-line
+float64 arithmetic, and the allocator's budget each step is the loop's own
+``warm`` — so the oracle cross-validates the JAX scan under ``reactive``
+and ``scale_to_zero`` autoscaling, not just the static budget.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.agents import Fleet
+from repro.core.capacity import (
+    COLD_START_HORIZON,
+    CapacityConfig,
+    capacity_policy_names,
+)
 from repro.core.routing import Workflow
 
 _EPS = 1e-9
@@ -116,6 +128,38 @@ def _objective_descent(
     return g
 
 
+def _capacity_desired(
+    name: str,
+    ema_tot: float,
+    q_tot: float,
+    idle_s: float,
+    keep_alive_s: float,
+    target_rate: float,
+    backlog_per: float,
+    min_instances: float,
+    g_total: float,
+    num_gpus: float,
+) -> float:
+    """The registry's three capacity rules, straight-line python.  The
+    cold-start delay is not an input: it shapes *when* a request warms
+    (the caller's delay line), never how many instances are desired."""
+    if name == "fixed":
+        return g_total
+    rate_need = np.ceil(ema_tot / max(target_rate, _EPS))
+    backlog_boost = np.floor(q_tot / max(backlog_per, _EPS))
+    desired = rate_need + backlog_boost
+    if name == "reactive":
+        return float(np.clip(desired, min_instances, num_gpus))
+    if name == "scale_to_zero":
+        floor = max(min_instances, 1.0)
+        active_desired = float(np.clip(desired, floor, num_gpus))
+        return active_desired if idle_s <= keep_alive_s else 0.0
+    raise ValueError(
+        f"unknown capacity policy {name!r}; oracle supports "
+        f"{capacity_policy_names()}"
+    )
+
+
 def simulate_numpy(
     policy: str,
     arrivals: np.ndarray,
@@ -124,9 +168,12 @@ def simulate_numpy(
     latency_cap: float = 1000.0,
     ema_alpha: float = 0.3,
     workflow: Workflow | None = None,
+    capacity: CapacityConfig | None = None,
+    num_gpus: float = 1.0,
 ) -> dict:
     """Returns per-step arrays matching SimTrace semantics (plus
-    ``completed``, the requests exiting the workflow at each agent)."""
+    ``completed``, the requests exiting the workflow at each agent, and
+    ``warm``/``pending``, the warm pool's trajectory)."""
     if policy not in SUPPORTED_POLICIES:
         raise ValueError(
             f"unknown policy {policy!r}; oracle supports {SUPPORTED_POLICIES}"
@@ -152,11 +199,23 @@ def simulate_numpy(
     # unpadded fleets; padded-fleet parity is the registry's job.)
     arrivals = np.asarray(arrivals, np.float64) * source[None, :] * active[None, :]
 
+    if capacity is not None:
+        cap_name = capacity_policy_names()[int(capacity.policy_id)]
+        cold_start_s = float(np.asarray(capacity.cold_start_s))
+        keep_alive_s = float(np.asarray(capacity.keep_alive_s))
+        target_rate = float(np.asarray(capacity.target_rate_per_instance))
+        backlog_per = float(np.asarray(capacity.backlog_per_instance))
+        min_instances = float(np.asarray(capacity.min_instances))
+        delay = int(np.clip(np.round(cold_start_s), 0, COLD_START_HORIZON - 1))
+    warm = float(g_total)
+    pipeline = np.zeros(COLD_START_HORIZON)
+    idle_s = 0.0
+
     q = np.zeros(n)
     endo = np.zeros(n)
     ema = arrivals[0].copy()
     out = {"allocation": [], "served": [], "queue": [], "latency": [],
-           "completed": []}
+           "completed": [], "warm": [], "pending": []}
 
     for t in range(steps):
         lam = arrivals[t] + endo  # total intake: exogenous + routed
@@ -164,27 +223,50 @@ def simulate_numpy(
         # again at t=0 would double-count it.
         if t > 0:
             ema = ema_alpha * lam + (1 - ema_alpha) * ema
+        if capacity is not None:
+            # Same step order as capacity.capacity_step: warm-ups, idle
+            # clock, decision, instant scale-down, cold-start requests.
+            warm += pipeline[0]
+            pipeline = np.append(pipeline[1:], 0.0)
+            idle_s = 0.0 if (lam.sum() + q.sum()) > 0 else idle_s + 1.0
+            pending = pipeline.sum()
+            desired = _capacity_desired(
+                cap_name, ema.sum(), q.sum(), idle_s, keep_alive_s,
+                target_rate, backlog_per, min_instances, g_total, num_gpus,
+            )
+            warm = min(warm, desired)
+            request = max(desired - (warm + pending), 0.0)
+            if delay == 0:
+                warm += request
+            else:
+                # slot k warms at step t+k+1: a d-second delay is slot d-1
+                pipeline[delay - 1] += request
+            g_total_t = warm
+            pending_t = pipeline.sum()
+        else:
+            g_total_t = g_total
+            pending_t = 0.0
         if policy == "static_equal":
-            g = np.full(n, g_total / n)
+            g = np.full(n, g_total_t / n)
         elif policy == "round_robin":
             g = np.zeros(n)
-            g[t % n] = g_total
+            g[t % n] = g_total_t
         elif policy in ("adaptive", "predictive"):
-            g = _adaptive(lam if policy == "adaptive" else ema, R, P, g_total)
+            g = _adaptive(lam if policy == "adaptive" else ema, R, P, g_total_t)
         elif policy == "water_filling":
             pressure = (q + lam) / np.maximum(T, _EPS)
             if pressure.sum() <= 0:
                 g = np.zeros(n)
             else:
-                prop = pressure / pressure.sum() * g_total
+                prop = pressure / pressure.sum() * g_total_t
                 g = np.maximum(np.where(pressure > 0, R, 0.0), prop)
-                g = _normalize(g, g_total)
+                g = _normalize(g, g_total_t)
         elif policy == "throughput_greedy":
-            g = _throughput_greedy(q, lam, T, R, g_total)
+            g = _throughput_greedy(q, lam, T, R, g_total_t)
         else:  # objective_descent
             # NB: the registry entry always runs the policy's internal
             # latency_cap default (1000), independent of the sim-level cap.
-            g = _objective_descent(q, lam, T, R, P, g_total)
+            g = _objective_descent(q, lam, T, R, P, g_total_t)
         cap = g * T
         served = np.minimum(cap, q + lam)
         q = q + lam - served
@@ -195,4 +277,6 @@ def simulate_numpy(
         out["queue"].append(q.copy())
         out["latency"].append(lat.copy())
         out["completed"].append(served * exit_frac)
+        out["warm"].append(g_total_t)
+        out["pending"].append(pending_t)
     return {k: np.asarray(v) for k, v in out.items()}

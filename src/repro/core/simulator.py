@@ -11,8 +11,20 @@ Semantics reconstructed from the paper (DESIGN.md §6):
   This clipping is what produces the paper's round-robin figure of
   756.1 s ≈ 0.75·1000 + on-turn drain; we reproduce it faithfully and also
   expose the unclipped long-run latency (``littles_law_latency``);
-* cost is the provisioned-device cost: duration · price/hour — identical
-  across policies, as in Table II.
+* cost is billed on **warm-instance-seconds** (``capacity.billing_cost``):
+  with the default always-on pool this reduces to the provisioned-device
+  cost of Table II (duration · price/hour, identical across policies), but
+  under an elastic capacity policy it is genuinely policy-dependent.
+
+**Serverless capacity** (``core/capacity.py``) makes the budget itself part
+of the dynamics: with a ``CapacityConfig`` the scan carries a warm-pool
+autoscaler state and the allocator's budget becomes the traced trajectory
+``g_total(t) = warm(t)`` — discrete instances, cold-start delay lines,
+scale-to-zero keep-alive windows, an instance ceiling at
+``SimConfig.num_gpus``.  With ``capacity=None`` the budget stays the static
+python float ``config.g_total`` — exactly the pre-capacity program — and
+``fixed`` capacity with zero cold start reproduces it bit-for-bit
+(regression-tested per policy in tests/test_capacity.py).
 
 **Workflow routing** (``core/routing.py``) makes the multi-agent dataflow
 itself part of the dynamics: each step's *served* requests at agent i are
@@ -45,7 +57,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import allocator as alloc
+from repro.core import capacity as cap_mod
 from repro.core.agents import Fleet, T4_PRICE_PER_HOUR
+from repro.core.capacity import CapacityConfig, billing_cost
 from repro.core.routing import Workflow, check_workflow
 
 _EPS = 1e-9
@@ -60,12 +74,27 @@ def __getattr__(attr: str):
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
+    """Static simulation knobs (hashable; a jit static argument).
+
+    ``g_total`` is the provisioned budget: the allocator's constant budget
+    when no capacity layer runs, and the warm pool's t=0 baseline when one
+    does.  ``num_gpus`` is the **warm-pool instance ceiling** — the most
+    instances any capacity policy may keep warm or pending (it is *not* a
+    second copy of the budget; configs with ``g_total > num_gpus`` are
+    rejected, since the static budget could never be provisioned under its
+    own ceiling).  ``price_per_hour`` bills warm-instance-seconds via
+    ``capacity.billing_cost``.
+    """
+
     num_steps: int = 100
     g_total: float = 1.0
     latency_cap: float = 1000.0
     price_per_hour: float = T4_PRICE_PER_HOUR
     num_gpus: float = 1.0
     ema_alpha: float = 0.3
+
+    def __post_init__(self):
+        cap_mod.check_budget_ceiling(self.g_total, self.num_gpus)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -78,6 +107,10 @@ class SimTrace:
     that exited the workflow at each agent (= served, when no workflow
     routes traffic).  The difference between served and completed is the
     endogenous traffic forwarded downstream.
+
+    ``warm`` is the allocator's per-step budget ``g_total(t)`` — the warm
+    instance count under a capacity policy, the constant ``config.g_total``
+    without one; ``pending`` counts instances still in their cold start.
     """
 
     allocation: jnp.ndarray  # (S, N) g_i(t)
@@ -86,14 +119,20 @@ class SimTrace:
     latency: jnp.ndarray     # (S, N) clipped drain-time estimate
     arrivals: jnp.ndarray    # (S, N) exogenous arrivals (source-gated)
     completed: jnp.ndarray = None  # (S, N) requests exiting the workflow
+    warm: jnp.ndarray = None       # (S,) warm instances = g_total(t)
+    pending: jnp.ndarray = None    # (S,) instances mid cold start
 
     def __post_init__(self):
         if self.completed is None:
             self.completed = self.served
+        if self.warm is None:
+            self.warm = jnp.ones(self.served.shape[:-1], jnp.float32)
+        if self.pending is None:
+            self.pending = jnp.zeros(self.served.shape[:-1], jnp.float32)
 
     def tree_flatten(self):
         return (self.allocation, self.served, self.queue, self.latency,
-                self.arrivals, self.completed), None
+                self.arrivals, self.completed, self.warm, self.pending), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -110,7 +149,7 @@ class SimSummary:
     per_agent_latency: tuple
     total_throughput: float     # served requests / second
     per_agent_throughput: tuple
-    cost: float                 # provisioned $ for the run
+    cost: float                 # warm-instance-seconds billed in $
     gpu_utilization: float      # mean Σ g_i
     littles_law_latency: float  # unclipped long-run estimate
     mean_queue: float
@@ -119,6 +158,11 @@ class SimSummary:
     sink_throughput: float = 0.0        # requests exiting the workflow / s
     critical_path_latency: float = 0.0  # longest source→sink latency chain
     per_agent_queue: tuple = ()         # per-stage mean backlog
+    # Serverless capacity metrics; under the default always-on pool
+    # utilization == gpu_utilization / g_total and the stall time is 0.
+    utilization: float = 0.0            # Σ g / warm-instance-seconds
+    cold_start_stall_time: float = 0.0  # backlogged seconds with pending pool
+    mean_warm_instances: float = 0.0    # mean warm pool size
 
     @classmethod
     def from_metrics(
@@ -128,7 +172,6 @@ class SimSummary:
         per_agent_latency,
         per_agent_throughput,
         per_agent_queue,
-        cost: float,
     ) -> "SimSummary":
         """The one METRIC_NAMES-dict → summary mapping, shared by
         ``summarize`` and ``SweepResult.summary`` so a new metric cannot be
@@ -140,13 +183,16 @@ class SimSummary:
             per_agent_latency=tuple(float(x) for x in per_agent_latency),
             total_throughput=m["total_throughput"],
             per_agent_throughput=tuple(float(x) for x in per_agent_throughput),
-            cost=float(cost),
+            cost=m["cost"],
             gpu_utilization=m["gpu_utilization"],
             littles_law_latency=m["littles_law_latency"],
             mean_queue=m["mean_queue"],
             sink_throughput=m["sink_throughput"],
             critical_path_latency=m["critical_path_latency"],
             per_agent_queue=tuple(float(x) for x in per_agent_queue),
+            utilization=m["utilization"],
+            cold_start_stall_time=m["cold_start_stall_time"],
+            mean_warm_instances=m["mean_warm_instances"],
         )
 
 
@@ -157,10 +203,11 @@ def simulate_core(
     config: SimConfig,
     policy_names: Sequence[str] | None = None,
     workflow: Workflow | None = None,
+    capacity: CapacityConfig | None = None,
 ) -> SimTrace:
     """Pure scan body — jit/vmap-able over ``policy_id``, ``arrivals``, the
-    ``fleet`` pytree and the ``workflow`` pytree (both may carry a batch
-    axis).
+    ``fleet`` pytree, the ``workflow`` pytree and the ``capacity`` pytree
+    (any of which may carry a batch axis).
 
     The EMA carry is seeded with the first observation; the update is skipped
     at t=0 so that observation is not applied twice.  Exogenous arrivals are
@@ -170,6 +217,14 @@ def simulate_core(
     step via the routing matrix.  With ``workflow=None`` the endogenous
     path contributes exact zeros — trajectories are bit-for-bit identical
     to the pre-routing simulator.
+
+    With a ``capacity`` config the scan also carries the warm-pool state:
+    the autoscaler runs *before* the allocation policy each step (cohorts
+    warm up, the idle clock ticks, desired count is chosen) and the policy's
+    budget is the traced ``warm(t)`` instead of the static ``config.g_total``.
+    With ``capacity=None`` the budget stays a python float — the literal
+    pre-capacity program — which the ``fixed``/zero-cold-start capacity path
+    must reproduce bit-for-bit (tests/test_capacity.py).
     """
     names = alloc.policy_names() if policy_names is None else tuple(policy_names)
     n = fleet.num_agents
@@ -182,29 +237,46 @@ def simulate_core(
     arrivals = arrivals * fleet.active * source
     route_eff = route * fan_out[..., :, None]   # forwarded copies
     exit_frac = jnp.maximum(1.0 - route.sum(axis=-1), 0.0)
+    elastic = capacity is not None
 
     def step(carry, inp):
-        queue, lam_ema, endo = carry
+        if elastic:
+            queue, lam_ema, endo, cstate = carry
+        else:
+            queue, lam_ema, endo = carry
         t, lam_exo = inp
         lam = lam_exo + endo            # total intake: exogenous + routed
         lam_ema = jnp.where(
             t > 0, alloc.ema_forecast(lam_ema, lam, config.ema_alpha), lam_ema
         )
+        if elastic:
+            cstate, g_total_t, pending_t = cap_mod.capacity_step(
+                cstate, capacity, t, lam.sum(), lam_ema.sum(), queue.sum(),
+                config.g_total, config.num_gpus,
+            )
+        else:
+            g_total_t = config.g_total  # static python float: the pre-capacity program
+            pending_t = jnp.zeros((), jnp.float32)
         g = alloc.policy_switch(
-            policy_id, t, lam, lam_ema, queue, fleet, config.g_total, names
+            policy_id, t, lam, lam_ema, queue, fleet, g_total_t, names
         )
-        capacity = g * fleet.base_throughput
-        served = jnp.minimum(capacity, queue + lam)
+        capacity_rps = g * fleet.base_throughput
+        served = jnp.minimum(capacity_rps, queue + lam)
         new_queue = queue + lam - served
         latency = jnp.minimum(
-            new_queue / jnp.maximum(capacity, _EPS), config.latency_cap
+            new_queue / jnp.maximum(capacity_rps, _EPS), config.latency_cap
         )
         completed = served * exit_frac  # row deficit exits the workflow
         # Routed mass arrives downstream next step; the active gate keeps
         # padded slots inert even if a route column points at one (the
         # misrouted mass is dropped, exactly like gated exogenous traffic).
         new_endo = (served @ route_eff) * fleet.active
-        return (new_queue, lam_ema, new_endo), (g, served, new_queue, latency, completed)
+        warm_t = jnp.asarray(g_total_t, jnp.float32)
+        new_carry = (
+            (new_queue, lam_ema, new_endo, cstate) if elastic
+            else (new_queue, lam_ema, new_endo)
+        )
+        return new_carry, (g, served, new_queue, latency, completed, warm_t, pending_t)
 
     num_steps = arrivals.shape[0]
     ts = jnp.arange(num_steps)
@@ -213,14 +285,17 @@ def simulate_core(
         arrivals[0],
         jnp.zeros(n, jnp.float32),
     )
-    _, (g, served, queue, latency, completed) = jax.lax.scan(
+    if elastic:
+        init = init + (cap_mod.init_capacity_state(config.g_total),)
+    _, (g, served, queue, latency, completed, warm, pending) = jax.lax.scan(
         step, init, (ts, arrivals)
     )
-    return SimTrace(g, served, queue, latency, arrivals, completed)
+    return SimTrace(g, served, queue, latency, arrivals, completed, warm, pending)
 
 
-# ``Fleet`` and ``Workflow`` are registered pytrees (names are static aux
-# data), so they pass straight through jit — no array/static plumbing.
+# ``Fleet``, ``Workflow`` and ``CapacityConfig`` are registered pytrees
+# (names are static aux data), so they pass straight through jit — no
+# array/static plumbing.
 _simulate_jit = jax.jit(simulate_core, static_argnames=("config", "policy_names"))
 
 
@@ -230,20 +305,26 @@ def simulate(
     fleet: Fleet,
     config: SimConfig = SimConfig(),
     workflow: Workflow | None = None,
+    capacity: CapacityConfig | None = None,
 ) -> SimTrace:
     """Run one registered policy over an (S, N) arrival matrix, optionally
-    routing served requests through a ``Workflow`` topology."""
+    routing served requests through a ``Workflow`` topology and/or scaling
+    the warm pool with a ``CapacityConfig`` autoscaler."""
     fleet.validate()
     if workflow is not None:
         check_workflow(workflow, fleet.num_agents)
+    if capacity is not None:
+        cap_mod.check_capacity(capacity, config.g_total, config.num_gpus)
     return _simulate_jit(
         jnp.asarray(alloc.policy_id(policy)), arrivals, fleet, config,
-        alloc.policy_names(), workflow,
+        alloc.policy_names(), workflow, capacity,
     )
 
 
 # Order of the metric vector returned by trace_metrics (and of the metric
-# axis in sweep grids).
+# axis in sweep grids).  Capacity metrics (cost included — it is now
+# policy-dependent) live at the end so index-based consumers of the original
+# eight keep working.
 METRIC_NAMES = (
     "avg_latency",
     "latency_std",
@@ -253,6 +334,10 @@ METRIC_NAMES = (
     "littles_law_latency",
     "sink_throughput",
     "critical_path_latency",
+    "cost",
+    "utilization",
+    "cold_start_stall_time",
+    "mean_warm_instances",
 )
 
 
@@ -284,8 +369,10 @@ def trace_metrics(
     trace: SimTrace,
     active: jnp.ndarray | None = None,
     workflow: Workflow | None = None,
+    *,
+    config: SimConfig,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Table II + workflow reductions for one trace, jit/vmap-safe.
+    """Table II + workflow + capacity reductions for one trace, jit/vmap-safe.
 
     Returns (metric vector in METRIC_NAMES order, per-agent mean latency,
     per-agent mean throughput, per-agent mean queue — the per-stage backlog
@@ -298,7 +385,13 @@ def trace_metrics(
     ``workflow`` feeds the end-to-end metrics: ``sink_throughput`` counts
     requests *exiting* the workflow (served = sink throughput when nothing
     is routed) and ``critical_path_latency`` chains per-stage latencies
-    along the routing DAG.
+    along the routing DAG.  ``config`` prices the capacity metrics and is
+    deliberately required — it must be the config the trace was produced
+    under, or the cost column is silently priced wrong: ``cost`` bills the
+    trace's warm-instance-seconds, ``utilization`` is the allocated
+    fraction of the warm pool, and ``cold_start_stall_time`` counts the
+    seconds the fleet sat backlogged while instances were still cold — the
+    serverless tax no provisioned-cost model can see.
     """
     m = jnp.ones(trace.latency.shape[-1]) if active is None else active
     n_active = jnp.maximum(m.sum(), 1.0)
@@ -312,6 +405,8 @@ def trace_metrics(
     littles = mmean(per_queue / longrun_rate)
     lat_mean = mmean(per_lat)
     lat_std = jnp.sqrt(mmean((per_lat - lat_mean) ** 2))
+    warm_seconds = trace.warm.sum()  # 1 s steps: Σ_t warm(t) · 1 s
+    backlogged = (trace.queue * m).sum(axis=-1) > 0
     vec = jnp.stack([
         lat_mean,
         lat_std,
@@ -321,6 +416,10 @@ def trace_metrics(
         littles,
         (completed.mean(axis=0) * m).sum(),
         critical_path_latency(per_lat, workflow, m),
+        billing_cost(warm_seconds, config.price_per_hour),
+        trace.allocation.sum() / jnp.maximum(warm_seconds, _EPS),
+        ((trace.pending > 0) & backlogged).sum().astype(jnp.float32),
+        trace.warm.mean(),
     ])
     return vec, per_lat, per_tput, per_queue
 
@@ -334,13 +433,11 @@ def summarize(
 ) -> SimSummary:
     """Table II metrics from a trace (``active`` masks padded agents)."""
     vec, per_agent_lat, per_agent_tput, per_agent_queue = trace_metrics(
-        trace, active, workflow
+        trace, active, workflow, config=config
     )
-    duration_s = trace.served.shape[0]
-    cost = config.num_gpus * duration_s / 3600.0 * config.price_per_hour
     m = dict(zip(METRIC_NAMES, (float(x) for x in vec)))
     return SimSummary.from_metrics(
-        policy, m, per_agent_lat, per_agent_tput, per_agent_queue, cost
+        policy, m, per_agent_lat, per_agent_tput, per_agent_queue
     )
 
 
@@ -350,10 +447,11 @@ def run_policy(
     fleet: Fleet,
     config: SimConfig = SimConfig(),
     workflow: Workflow | None = None,
+    capacity: CapacityConfig | None = None,
 ) -> SimSummary:
     return summarize(
         policy,
-        simulate(policy, arrivals, fleet, config, workflow),
+        simulate(policy, arrivals, fleet, config, workflow, capacity),
         config,
         fleet.active,
         workflow,

@@ -1,17 +1,19 @@
-"""Vmapped (fleet | workflow × policy × workload) sweep grids — the
-evaluation surface.
+"""Vmapped (fleet | workflow | capacity × policy × workload) sweep grids —
+the evaluation surface.
 
 The paper's claim (Table II / Fig. 2) is comparative: adaptive vs baselines
 across workloads.  This module evaluates the *entire* policy registry
-against a scenario library in ONE jitted call, and — because ``Fleet`` and
-``Workflow`` are registered pytrees (``core/agents.py`` /
-``core/routing.py``) — scales that grid along a batched **fleet axis** of
-heterogeneous fleet sizes or a batched **workflow axis** of routing
-topologies:
+against a scenario library in ONE jitted call, and — because ``Fleet``,
+``Workflow`` and ``CapacityConfig`` are registered pytrees
+(``core/agents.py`` / ``core/routing.py`` / ``core/capacity.py``) — scales
+that grid along a batched **fleet axis** of heterogeneous fleet sizes, a
+batched **workflow axis** of routing topologies, or a batched **capacity
+axis** of warm-pool autoscalers:
 
     sweep(fleet, scenario_library(rates))          ->  SweepResult (P, W)
     sweep_fleets([fleet_4, ..., fleet_256])        ->  SweepResult (F, P, W)
     sweep_workflows(fleet, scenarios=...)          ->  SweepResult (K, P, W)
+    sweep_capacity(fleet, scenarios=...)           ->  SweepResult (C, P, W)
 
 ``sweep`` nests ``vmap(policy) ∘ vmap(workload)`` over ``simulate_core``;
 ``sweep_fleets`` pads every fleet to a common width, stacks them
@@ -20,11 +22,17 @@ topologies:
 ``sweep_workflows`` stacks routing topologies (``stack_workflows``) and
 adds ``vmap(workflow)`` outermost — policies are ranked under *inter-agent
 dataflow*, not just arrival processes; ``workflow_scenario_library`` builds
-the canonical topology set for a fleet width.  Padded slots contribute zero
-demand, receive exactly g = 0 from every registered policy, are excluded
-from all metric reductions, and receive/forward no routed traffic
-(``pad_workflow``), so each row of a batched grid matches its unbatched
-original within float tolerance.
+the canonical topology set for a fleet width.  ``sweep_capacity`` stacks
+autoscaler configs (``stack_capacities``) and adds ``vmap(capacity)``
+outermost, so every allocation policy is ranked under every elasticity
+regime — the cost column of the grid is per-cell (warm-instance-seconds
+billing) and genuinely differs across cells; ``capacity_scenario_library``
+builds the canonical capacity set (always-on, reactive with and without
+cold starts, scale-to-zero).  Padded slots contribute zero demand, receive
+exactly g = 0 from every registered policy, are excluded from all metric
+reductions, and receive/forward no routed traffic (``pad_workflow``), so
+each row of a batched grid matches its unbatched original within float
+tolerance.
 
 The batched fleet grid is **device-sharded**: the fleet axis is laid out
 across ``jax.devices()`` with a 1D mesh + ``NamedSharding`` (the
@@ -52,6 +60,12 @@ from repro.core import allocator as alloc
 from repro.core import routing
 from repro.core import workload
 from repro.core.agents import Fleet, stack_fleets
+from repro.core.capacity import (
+    CapacityConfig,
+    capacity_config,
+    check_capacity,
+    stack_capacities,
+)
 from repro.core.routing import Workflow, stack_workflows
 from repro.core.simulator import (
     METRIC_NAMES,
@@ -155,9 +169,8 @@ class SweepSummary:
         return out
 
     def best(self, metric: str = "avg_latency", minimize: bool = True) -> dict[str, str]:
-        """Winning policy per scenario (per fleet/scenario or
-        workflow/scenario when the table has a leading batch axis) under
-        one metric.
+        """Winning policy per scenario (per fleet/workflow/capacity and
+        scenario when the table has a leading batch axis) under one metric.
 
         Comparisons are strict, so exact ties are stable: the first row in
         table order (= policy-registry order) keeps the win in both the
@@ -167,7 +180,7 @@ class SweepSummary:
         si = self.columns.index("scenario")
         pi = self.columns.index("policy")
         fi = next(
-            (self.columns.index(c) for c in ("fleet", "workflow")
+            (self.columns.index(c) for c in ("fleet", "workflow", "capacity")
              if c in self.columns),
             None,
         )
@@ -186,31 +199,36 @@ class SweepSummary:
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """Raw grids from one sweep; axes are ([fleet | workflow,] policy,
-    scenario[, agent]).
+    """Raw grids from one sweep; axes are ([fleet | workflow | capacity,]
+    policy, scenario[, agent]).
 
-    ``fleet_names`` / ``workflow_names`` are None for a plain 2-axis
-    ``sweep``; when one is set (the ``sweep_fleets`` / ``sweep_workflows``
-    paths) every grid carries that leading batch axis.
+    ``fleet_names`` / ``workflow_names`` / ``capacity_names`` are None for a
+    plain 2-axis ``sweep``; when one is set (the ``sweep_fleets`` /
+    ``sweep_workflows`` / ``sweep_capacity`` paths) every grid carries that
+    leading batch axis.  Cost is a per-cell metric (``metrics[...,
+    METRIC_NAMES.index("cost")]``, warm-instance-seconds billing) — it is
+    only constant across cells under an always-on capacity pool.
     """
 
     policy_names: tuple[str, ...]
     scenario_names: tuple[str, ...]
-    metrics: np.ndarray               # ([F|K,] P, W, len(METRIC_NAMES)) float32
-    per_agent_latency: np.ndarray     # ([F|K,] P, W, N)
-    per_agent_throughput: np.ndarray  # ([F|K,] P, W, N)
-    cost: float                       # provisioned $, identical across cells
+    metrics: np.ndarray               # ([F|K|C,] P, W, len(METRIC_NAMES)) float32
+    per_agent_latency: np.ndarray     # ([F|K|C,] P, W, N)
+    per_agent_throughput: np.ndarray  # ([F|K|C,] P, W, N)
     config: SimConfig
-    traces: SimTrace | None = None    # leaves ([F|K,] P, W, S, N) when kept
+    traces: SimTrace | None = None    # leaves ([F|K|C,] P, W, S, N) when kept
     fleet_names: tuple[str, ...] | None = None
     workflow_names: tuple[str, ...] | None = None
-    per_agent_queue: np.ndarray | None = None  # ([F|K,] P, W, N) per-stage backlog
+    capacity_names: tuple[str, ...] | None = None
+    per_agent_queue: np.ndarray | None = None  # ([F|K|C,] P, W, N) per-stage backlog
 
     def _leading_axis(self) -> tuple[str, tuple[str, ...]] | None:
         if self.fleet_names is not None:
             return "fleet", self.fleet_names
         if self.workflow_names is not None:
             return "workflow", self.workflow_names
+        if self.capacity_names is not None:
+            return "capacity", self.capacity_names
         return None
 
     def metric(self, name: str) -> np.ndarray:
@@ -222,11 +240,12 @@ class SweepResult:
         scenario: str,
         fleet: str | None,
         workflow: str | None = None,
+        capacity: str | None = None,
     ):
         p = self.policy_names.index(policy)
         w = self.scenario_names.index(scenario)
         lead = self._leading_axis()
-        picked = {"fleet": fleet, "workflow": workflow}
+        picked = {"fleet": fleet, "workflow": workflow, "capacity": capacity}
         if lead is None:
             bad = [k for k, v in picked.items() if v is not None]
             if bad:
@@ -235,9 +254,9 @@ class SweepResult:
         axis, names = lead
         if picked[axis] is None:
             raise ValueError(f"{axis} axis present; pick one of {names}")
-        other = "workflow" if axis == "fleet" else "fleet"
-        if picked[other] is not None:
-            raise ValueError(f"this sweep has no {other} axis")
+        for other in picked:
+            if other != axis and picked[other] is not None:
+                raise ValueError(f"this sweep has no {other} axis")
         return (names.index(picked[axis]), p, w)
 
     def summary(
@@ -246,20 +265,21 @@ class SweepResult:
         scenario: str,
         fleet: str | None = None,
         workflow: str | None = None,
+        capacity: str | None = None,
     ) -> SimSummary:
         """One cell as a ``SimSummary`` — same fields as ``run_policy``."""
-        idx = self._cell_index(policy, scenario, fleet, workflow)
+        idx = self._cell_index(policy, scenario, fleet, workflow, capacity)
         m = dict(zip(METRIC_NAMES, (float(x) for x in self.metrics[idx])))
         per_queue = (
             () if self.per_agent_queue is None else self.per_agent_queue[idx]
         )
         return SimSummary.from_metrics(
             policy, m, self.per_agent_latency[idx],
-            self.per_agent_throughput[idx], per_queue, self.cost,
+            self.per_agent_throughput[idx], per_queue,
         )
 
     def table(self) -> SweepSummary:
-        base = ("policy", "scenario") + METRIC_NAMES + ("cost",)
+        base = ("policy", "scenario") + METRIC_NAMES
         # One loop serves all shapes: an unbatched grid is a single
         # anonymous leading slot whose prefix column is dropped.
         lead = self._leading_axis()
@@ -270,9 +290,7 @@ class SweepResult:
             for p, pol in enumerate(self.policy_names):
                 for w, scen in enumerate(self.scenario_names):
                     prefix = (pol, scen) if lead is None else (fl, pol, scen)
-                    rows.append(
-                        prefix + tuple(float(x) for x in grid[p, w]) + (self.cost,)
-                    )
+                    rows.append(prefix + tuple(float(x) for x in grid[p, w]))
         columns = base if lead is None else ((lead[0],) + base)
         return SweepSummary(columns=columns, rows=tuple(rows))
 
@@ -285,6 +303,7 @@ def _grid_jit(
     arrivals: jnp.ndarray,   # (W, S, N), or (F, W, S, N) when batch_axis="fleet"
     fleet: Fleet,            # leaves (N,), or (F, N) when batch_axis="fleet"
     workflow: Workflow | None,  # leaves (K, N, N)/(K, N) when batch_axis="workflow"
+    capacity: CapacityConfig | None,  # leaves (C,) when batch_axis="capacity"
     config: SimConfig,
     reg_names: tuple,
     keep_traces: bool,
@@ -294,26 +313,31 @@ def _grid_jit(
 
     ``batch_axis`` picks the outermost vmapped dimension: None (plain
     ``sweep``), "fleet" (batched fleet leaves + matched per-fleet arrival
-    columns), or "workflow" (batched routing topologies over one shared
-    scenario block).
+    columns), "workflow" (batched routing topologies over one shared
+    scenario block), or "capacity" (batched warm-pool autoscaler configs).
     """
 
-    def cell(fl, wf, pid, arr):
-        trace = simulate_core(pid, arr, fl, config, reg_names, wf)
-        vec, per_lat, per_tput, per_q = trace_metrics(trace, fl.active, wf)
+    def cell(fl, wf, cp, pid, arr):
+        trace = simulate_core(pid, arr, fl, config, reg_names, wf, cp)
+        vec, per_lat, per_tput, per_q = trace_metrics(
+            trace, fl.active, wf, config=config
+        )
         if keep_traces:
             return vec, per_lat, per_tput, per_q, trace
         return vec, per_lat, per_tput, per_q
 
-    over_scen = jax.vmap(cell, in_axes=(None, None, None, 0))
-    over_pol = jax.vmap(over_scen, in_axes=(None, None, 0, None))
+    over_scen = jax.vmap(cell, in_axes=(None, None, None, None, 0))
+    over_pol = jax.vmap(over_scen, in_axes=(None, None, None, 0, None))
     if batch_axis is None:
-        return over_pol(fleet, workflow, pids, arrivals)
+        return over_pol(fleet, workflow, capacity, pids, arrivals)
     outer_axes = {
-        "fleet": (0, None, None, 0),
-        "workflow": (None, 0, None, None),
+        "fleet": (0, None, None, None, 0),
+        "workflow": (None, 0, None, None, None),
+        "capacity": (None, None, 0, None, None),
     }[batch_axis]
-    return jax.vmap(over_pol, in_axes=outer_axes)(fleet, workflow, pids, arrivals)
+    return jax.vmap(over_pol, in_axes=outer_axes)(
+        fleet, workflow, capacity, pids, arrivals
+    )
 
 
 def grid_mesh() -> jax.sharding.Mesh:
@@ -346,15 +370,19 @@ def sweep(
     config: SimConfig = SimConfig(),
     policies: Sequence[str] | None = None,
     keep_traces: bool = False,
+    capacity: CapacityConfig | None = None,
 ) -> SweepResult:
     """Evaluate ``policies`` (default: the whole registry) × ``scenarios``.
 
     All scenarios must share one (S, N) shape.  The grid is a single jitted
     ``vmap(policy) ∘ vmap(workload)`` call over ``simulate_core`` (cached
-    across calls with the same fleet structure/config/registry); the cost
-    column is computed host-side (it is allocation-independent).
+    across calls with the same fleet structure/config/registry).  An
+    optional ``capacity`` autoscaler applies to every cell; cost is a
+    per-cell metric either way.
     """
     fleet.validate()
+    if capacity is not None:
+        check_capacity(capacity, config.g_total, config.num_gpus)
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
@@ -362,20 +390,17 @@ def sweep(
         [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
     )  # (W, S, N)
 
-    out = _grid_jit(pids, arrivals, fleet, None, config, reg_names, keep_traces,
-                    None)
+    out = _grid_jit(pids, arrivals, fleet, None, capacity, config, reg_names,
+                    keep_traces, None)
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
     traces = out[4] if keep_traces else None
 
-    num_steps = arrivals.shape[1]
-    cost = config.num_gpus * num_steps / 3600.0 * config.price_per_hour
     return SweepResult(
         policy_names=names,
         scenario_names=tuple(s.name for s in scenarios),
         metrics=metrics,
         per_agent_latency=per_lat,
         per_agent_throughput=per_tput,
-        cost=float(cost),
         config=config,
         traces=traces,
         per_agent_queue=per_q,
@@ -439,19 +464,17 @@ def sweep_fleets(
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
-    out = _grid_jit(pids, arrivals, stacked, None, config, reg_names, keep_traces,
-                    "fleet")
+    out = _grid_jit(pids, arrivals, stacked, None, None, config, reg_names,
+                    keep_traces, "fleet")
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
     traces = out[4] if keep_traces else None
 
-    cost = config.num_gpus * num_steps / 3600.0 * config.price_per_hour
     return SweepResult(
         policy_names=names,
         scenario_names=scen_names,
         metrics=metrics,
         per_agent_latency=per_lat,
         per_agent_throughput=per_tput,
-        cost=float(cost),
         config=config,
         traces=traces,
         fleet_names=fleet_names,
@@ -526,22 +549,126 @@ def sweep_workflows(
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
     out = _grid_jit(
-        pids, arrivals, fleet, stacked_wf, config, reg_names, keep_traces,
+        pids, arrivals, fleet, stacked_wf, None, config, reg_names, keep_traces,
         "workflow",
     )
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
     traces = out[4] if keep_traces else None
 
-    cost = config.num_gpus * arrivals.shape[1] / 3600.0 * config.price_per_hour
     return SweepResult(
         policy_names=names,
         scenario_names=tuple(s.name for s in scenarios),
         metrics=metrics,
         per_agent_latency=per_lat,
         per_agent_throughput=per_tput,
-        cost=float(cost),
         config=config,
         traces=traces,
         workflow_names=workflow_names,
+        per_agent_queue=per_q,
+    )
+
+
+def capacity_scenario_library(
+    cold_start_s: float = 5.0,
+    keep_alive_s: float = 10.0,
+    target_rate_per_instance: float = 60.0,
+    backlog_per_instance: float = 50.0,
+) -> tuple[CapacityConfig, ...]:
+    """The canonical capacity-policy set — the capacity axis of
+    ``sweep_capacity``.
+
+    ``fixed`` (the pre-capacity always-on pool), ``reactive`` with free
+    scale-up, ``reactive_cold`` paying ``cold_start_s`` per new instance,
+    and ``scale_to_zero`` with both a cold start and a keep-alive window.
+    """
+    return (
+        capacity_config("fixed"),
+        capacity_config(
+            "reactive",
+            target_rate_per_instance=target_rate_per_instance,
+            backlog_per_instance=backlog_per_instance,
+            min_instances=1.0,
+        ),
+        capacity_config(
+            "reactive",
+            cold_start_s=cold_start_s,
+            target_rate_per_instance=target_rate_per_instance,
+            backlog_per_instance=backlog_per_instance,
+            min_instances=1.0,
+            name="reactive_cold",
+        ),
+        capacity_config(
+            "scale_to_zero",
+            cold_start_s=cold_start_s,
+            keep_alive_s=keep_alive_s,
+            target_rate_per_instance=target_rate_per_instance,
+            backlog_per_instance=backlog_per_instance,
+        ),
+    )
+
+
+def sweep_capacity(
+    fleet: Fleet,
+    capacities: Sequence[CapacityConfig] | None = None,
+    scenarios: Sequence[Scenario] | None = None,
+    num_steps: int = 100,
+    seed: int = 0,
+    config: SimConfig = SimConfig(),
+    policies: Sequence[str] | None = None,
+    keep_traces: bool = False,
+) -> SweepResult:
+    """One jitted (capacity × policy × scenario) grid over one fleet.
+
+    Capacity configs are stacked into a single batched ``CapacityConfig``
+    pytree (``stack_capacities``) and vmapped outermost over the same
+    ``_grid_jit`` kernel as every other sweep — allocation policies are
+    ranked under *elasticity regimes*, and because billing is
+    warm-instance-seconds the grid's cost column differs across allocation
+    policies, capacity policies, and scenarios (the paper's cost-efficiency
+    comparison, finally non-vacuous).  Defaults: the canonical capacity
+    library and the standard scenario library over
+    ``workload.synthetic_rates``.
+    """
+    fleet.validate()
+    if capacities is None:
+        capacities = capacity_scenario_library()
+    capacities = list(capacities)
+    if not capacities:
+        raise ValueError("sweep_capacity needs at least one capacity config")
+    for cp in capacities:
+        check_capacity(cp, config.g_total, config.num_gpus)
+    capacity_names = tuple(c.name for c in capacities)
+    if len(set(capacity_names)) != len(capacity_names):
+        raise ValueError(f"capacity names must be unique: {capacity_names}")
+    stacked_cap = stack_capacities(capacities)
+
+    if scenarios is None:
+        scenarios = scenario_library(
+            workload.synthetic_rates(fleet.num_agents, seed=seed), num_steps, seed
+        )
+    arrivals = jnp.stack(
+        [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
+    )  # (W, S, N)
+
+    reg_names = alloc.policy_names()
+    names = reg_names if policies is None else tuple(policies)
+    pids = jnp.asarray([alloc.policy_id(p) for p in names])
+
+    out = _grid_jit(
+        pids, arrivals, fleet, None, stacked_cap, config, reg_names,
+        keep_traces, "capacity",
+    )
+    metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
+    traces = out[4] if keep_traces else None
+
+    return SweepResult(
+        policy_names=names,
+        scenario_names=tuple(s.name for s in scenarios),
+        metrics=metrics,
+        per_agent_latency=per_lat,
+        per_agent_throughput=per_tput,
+        config=config,
+        traces=traces,
+        capacity_names=capacity_names,
         per_agent_queue=per_q,
     )

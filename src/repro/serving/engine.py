@@ -16,7 +16,13 @@ The TPU-native reading of "allocate GPU fraction g_i to agent i" (DESIGN.md
      child request's prompt, fractional routing weights accumulate as
      credit and spawn whole child requests deterministically, and the
      children count as next-tick arrivals, exactly like the simulator's
-     endogenous-arrival path.
+     endogenous-arrival path,
+  7. with a ``CapacityConfig`` (``core/capacity.py``): runs the warm-pool
+     autoscaler each tick *before* the allocation policy — the tick's token
+     budget is ``warm(t) · budget_tokens`` (``budget_tokens`` is per
+     instance), so a scaled-to-zero pool decodes nothing and a cold-starting
+     pool stalls exactly as in the simulator; billing is warm-instance-ticks
+     through the same ``billing_cost`` helper.
 
 Runs end-to-end on CPU with reduced configs (examples/serve_fleet.py) —
 the same engine the production launcher would drive per pod.
@@ -32,7 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import allocator as alloc
-from repro.core.agents import Fleet
+from repro.core import capacity as cap_mod
+from repro.core.agents import Fleet, T4_PRICE_PER_HOUR
+from repro.core.capacity import CapacityConfig, billing_cost
 from repro.core.routing import Workflow, check_workflow
 from repro.models.model import ModelApi
 
@@ -86,11 +94,18 @@ class FleetEngine:
         g_total: float = 1.0,
         ema_alpha: float = 0.3,
         workflow: Workflow | None = None,
+        capacity: CapacityConfig | None = None,
+        num_gpus: float = 1.0,
+        price_per_hour: float = T4_PRICE_PER_HOUR,
     ):
         assert set(fleet.names) == set(runtimes)
         alloc.get_policy(policy)  # fail fast on unregistered policies
         if workflow is not None:
             check_workflow(workflow, fleet.num_agents)
+        if capacity is not None:
+            cap_mod.check_capacity(capacity, g_total, num_gpus)
+        else:
+            cap_mod.check_budget_ceiling(g_total, num_gpus)
         self.fleet = fleet
         self.runtimes = [runtimes[n] for n in fleet.names]
         self.policy = policy
@@ -98,6 +113,12 @@ class FleetEngine:
         self.budget_tokens = budget_tokens
         self.g_total = g_total
         self.workflow = workflow
+        self.capacity = capacity
+        self.num_gpus = num_gpus
+        self.price_per_hour = price_per_hour
+        # Warm-pool state: the same eager ``capacity_step`` the simulator
+        # scans over, so engine and simulator cannot drift.
+        self._cap_state = cap_mod.init_capacity_state(g_total)
         self.tick = 0
         self._next_id = 0
         self._arrivals_this_tick = np.zeros(fleet.num_agents)
@@ -149,12 +170,11 @@ class FleetEngine:
 
     # -- allocation ----------------------------------------------------------
 
-    def _allocate(self, lam: np.ndarray, queues: np.ndarray) -> np.ndarray:
-        t = jnp.asarray(self.tick)
-        lam_j, q_j = jnp.asarray(lam, jnp.float32), jnp.asarray(queues, jnp.float32)
-        # Same EMA semantics as the simulator's scan: seed with the first
-        # observation, update thereafter — at the first tick the policy
-        # sees lam_ema == lam instead of a drifted zero-seeded forecast.
+    def _forecast(self, lam: np.ndarray) -> jnp.ndarray:
+        """Same EMA semantics as the simulator's scan: seed with the first
+        observation, update thereafter — at the first tick the policy sees
+        lam_ema == lam instead of a drifted zero-seeded forecast."""
+        lam_j = jnp.asarray(lam, jnp.float32)
         if not self._ema_seeded:
             ema_j = lam_j
             self._ema_seeded = True
@@ -163,7 +183,28 @@ class FleetEngine:
                 jnp.asarray(self._ema, jnp.float32), lam_j, self.ema_alpha
             )
         self._ema = np.asarray(ema_j)
-        g = alloc.dispatch(self.policy, t, lam_j, ema_j, q_j, self.fleet, self.g_total)
+        return ema_j
+
+    def _capacity_tick(
+        self, lam_tot: float, ema_tot: float, queue_tot: float
+    ) -> tuple[float, float]:
+        """One warm-pool autoscaler update; returns (warm, pending).  The
+        simulator's exact ``capacity_step``, run eagerly per tick."""
+        f32 = lambda x: jnp.asarray(x, jnp.float32)
+        self._cap_state, warm, pending = cap_mod.capacity_step(
+            self._cap_state, self.capacity, jnp.asarray(self.tick),
+            f32(lam_tot), f32(ema_tot), f32(queue_tot),
+            self.g_total, self.num_gpus,
+        )
+        return float(warm), float(pending)
+
+    def _allocate(
+        self, lam: np.ndarray, queues: np.ndarray, ema_j: jnp.ndarray,
+        g_total_t: float,
+    ) -> np.ndarray:
+        t = jnp.asarray(self.tick)
+        lam_j, q_j = jnp.asarray(lam, jnp.float32), jnp.asarray(queues, jnp.float32)
+        g = alloc.dispatch(self.policy, t, lam_j, ema_j, q_j, self.fleet, g_total_t)
         return np.asarray(g)
 
     # -- workflow routing ----------------------------------------------------
@@ -274,10 +315,21 @@ class FleetEngine:
             [len(rt.queue) + sum(r is not None for r in rt.active) for rt in self.runtimes],
             np.float32,
         )
-        g = self._allocate(lam, queues)
+        ema_j = self._forecast(lam)
+        if self.capacity is not None:
+            warm, pending = self._capacity_tick(
+                float(lam.sum()), float(np.asarray(ema_j).sum()),
+                float(queues.sum()),
+            )
+        else:
+            warm, pending = self.g_total, 0.0
+        g = self._allocate(lam, queues, ema_j, warm)
         served = np.zeros(len(self.runtimes))
         done_before = len(self.completed)
         for i, rt in enumerate(self.runtimes):
+            # g sums to at most the warm pool, so the fleet-wide spend is
+            # capped at warm · budget_tokens: the warm pool gates the
+            # token budget.
             budget = int(round(g[i] * self.budget_tokens))
             spent = self._admit(rt, budget)
             while spent < budget:
@@ -292,7 +344,7 @@ class FleetEngine:
         self.history.append(
             {"tick": self.tick, "allocation": g.tolist(), "arrivals": lam.tolist(),
              "queues": queues.tolist(), "decode_tokens": served.tolist(),
-             "routed": routed}
+             "routed": routed, "warm": warm, "pending": pending}
         )
         self.tick += 1
 
@@ -305,6 +357,7 @@ class FleetEngine:
             ls = [r.finish_tick - r.arrival_tick for r in self.completed if r.agent == n]
             per_agent[n] = float(np.mean(ls)) if ls else float("nan")
         toks = sum(len(r.tokens_out) for r in self.completed)
+        warm_ticks = sum(h["warm"] for h in self.history)
         out = {
             "completed": len(self.completed),
             "avg_latency_ticks": float(np.mean(lat)) if lat else float("nan"),
@@ -314,6 +367,12 @@ class FleetEngine:
             "mean_allocation": np.mean(
                 [h["allocation"] for h in self.history], axis=0
             ).tolist() if self.history else [],
+            # Billing: one tick = one second of warm capacity.
+            "warm_instance_ticks": float(warm_ticks),
+            "mean_warm_instances": (
+                float(warm_ticks / len(self.history)) if self.history else 0.0
+            ),
+            "cost_usd": float(billing_cost(warm_ticks, self.price_per_hour)),
         }
         if self.workflow is not None:
             # End-to-end view: a request finishing at a sink closes the

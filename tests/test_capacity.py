@@ -1,0 +1,369 @@
+"""Serverless capacity layer: the no-op guarantee, autoscaler dynamics,
+oracle parity, billing, and the vmapped capacity axis of the sweep grid."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import allocator as alloc
+from repro.core import workload
+from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
+from repro.core.capacity import (
+    COLD_START_HORIZON,
+    billing_cost,
+    capacity_config,
+    capacity_policy_id,
+    capacity_policy_names,
+    check_capacity,
+    stack_capacities,
+)
+from repro.core.reference_sim import simulate_numpy
+from repro.core.routing import pipeline_chain
+from repro.core.simulator import (
+    METRIC_NAMES,
+    SimConfig,
+    run_policy,
+    simulate,
+    summarize,
+)
+from repro.core.sweep import (
+    Scenario,
+    capacity_scenario_library,
+    scenario_library,
+    sweep_capacity,
+)
+
+FLEET = paper_fleet()
+RATES = jnp.asarray(PAPER_ARRIVAL_RATES, jnp.float32)
+TRACE_FIELDS = ("allocation", "served", "queue", "latency", "arrivals",
+                "completed", "warm", "pending")
+ELASTIC = SimConfig(g_total=1.0, num_gpus=8.0)
+
+
+def _onoff_arrivals(num_steps=60, on_until=10, scale=0.2):
+    """Traffic for the first ``on_until`` steps, then silence — the
+    scale-to-zero litmus workload."""
+    arr = np.zeros((num_steps, 4), np.float32)
+    arr[:on_until] = np.asarray(PAPER_ARRIVAL_RATES, np.float32) * scale
+    return jnp.asarray(arr)
+
+
+class TestRegistry:
+    def test_three_capacity_policies_registered(self):
+        assert set(capacity_policy_names()) >= {"fixed", "reactive",
+                                                "scale_to_zero"}
+
+    def test_ids_are_registration_order(self):
+        for i, name in enumerate(capacity_policy_names()):
+            assert capacity_policy_id(name) == i
+
+    def test_unknown_capacity_policy_raises(self):
+        with pytest.raises(ValueError, match="registered"):
+            capacity_config("warm_and_fuzzy")
+
+    def test_config_policy_roundtrip(self):
+        for name in capacity_policy_names():
+            assert capacity_config(name).policy == name
+
+
+class TestBilling:
+    def test_billing_formula(self):
+        # 3600 instance-seconds at $0.72/h is $0.72
+        assert abs(billing_cost(3600.0, 0.72) - 0.72) < 1e-9
+
+    def test_simulator_cost_is_the_billing_helper(self):
+        """DRY regression: the simulator's cost column must be the shared
+        helper applied to the trace's warm-instance-seconds — no second
+        formula anywhere."""
+        tr = simulate("adaptive", workload.constant(RATES, 50), FLEET)
+        s = summarize("adaptive", tr, SimConfig(), FLEET.active)
+        expect = billing_cost(float(np.asarray(tr.warm).sum()),
+                              SimConfig().price_per_hour)
+        assert abs(s.cost - expect) < 1e-9
+
+    def test_default_run_reproduces_table2_cost(self):
+        s = run_policy("adaptive", workload.constant(RATES, 100), FLEET)
+        assert abs(s.cost - 0.020) < 1e-6
+
+    def test_step_objective_cost_term_scales_with_warm_pool(self):
+        from repro.core.objective import ObjectiveWeights, step_objective
+
+        g = jnp.full(4, 0.25)
+        q = jnp.zeros(4)
+        lam = RATES
+        price = 0.0002
+        one = step_objective(g, q, lam, FLEET.base_throughput,
+                             ObjectiveWeights(), price, warm_instances=1.0)
+        four = step_objective(g, q, lam, FLEET.base_throughput,
+                              ObjectiveWeights(), price, warm_instances=4.0)
+        # identical latency/throughput terms; only billing moved (f32
+        # objective values are ~1e2, so the delta carries ~1e-6 noise)
+        assert abs(float(four - one) - 3.0 * price) < 1e-5
+
+
+class TestNoOpGuarantee:
+    """The hard invariant: ``fixed`` capacity with zero cold start must
+    reproduce the pre-capacity (static python-float budget) trajectories
+    bit-for-bit for every registered allocation policy."""
+
+    @pytest.mark.parametrize("policy", alloc.policy_names())
+    def test_fixed_capacity_is_bit_for_bit_noop(self, policy):
+        arr = workload.constant(RATES, 60)
+        base = simulate(policy, arr, FLEET)
+        capped = simulate(policy, arr, FLEET,
+                          capacity=capacity_config("fixed"))
+        for field in TRACE_FIELDS:
+            a = np.asarray(getattr(base, field))
+            b = np.asarray(getattr(capped, field))
+            assert np.array_equal(a, b), (policy, field)
+
+    def test_noop_holds_under_bursty_arrivals_and_workflow(self):
+        import jax
+
+        arr = workload.bursty(RATES, 50, jax.random.key(2))
+        wf = pipeline_chain(FLEET.num_agents)
+        for policy in ("adaptive", "throughput_greedy"):
+            base = simulate(policy, arr, FLEET, workflow=wf)
+            capped = simulate(policy, arr, FLEET, workflow=wf,
+                              capacity=capacity_config("fixed"))
+            for field in TRACE_FIELDS:
+                assert np.array_equal(
+                    np.asarray(getattr(base, field)),
+                    np.asarray(getattr(capped, field)),
+                ), (policy, field)
+
+    def test_fixed_warm_trace_is_constant_budget(self):
+        cfg = SimConfig(g_total=0.5, num_gpus=2.0)
+        tr = simulate("adaptive", workload.constant(RATES, 30), FLEET, cfg,
+                      capacity=capacity_config("fixed"))
+        np.testing.assert_array_equal(np.asarray(tr.warm), 0.5)
+        np.testing.assert_array_equal(np.asarray(tr.pending), 0.0)
+
+
+class TestAutoscalerDynamics:
+    def test_reactive_scales_up_under_load_and_respects_ceiling(self):
+        cap = capacity_config("reactive", min_instances=1.0)
+        tr = simulate("adaptive", workload.constant(RATES, 60), FLEET,
+                      ELASTIC, capacity=cap)
+        warm = np.asarray(tr.warm)
+        assert warm.max() > 1.0            # elastic: grew past the baseline
+        assert warm.max() <= ELASTIC.num_gpus + 1e-6
+        assert warm.min() >= 1.0 - 1e-6    # floor honored
+        # discrete instances: every step's pool is a whole count
+        np.testing.assert_array_equal(warm, np.round(warm))
+
+    def test_cold_start_delays_warmup(self):
+        """With a k-second cold start, the pool cannot grow before step k:
+        requests issued at t=0 warm up at t=k, and the pending gauge is
+        positive in between."""
+        k = 4
+        cap = capacity_config("reactive", cold_start_s=float(k),
+                              min_instances=1.0)
+        tr = simulate("adaptive", workload.constant(RATES, 30), FLEET,
+                      ELASTIC, capacity=cap)
+        warm = np.asarray(tr.warm)
+        pending = np.asarray(tr.pending)
+        assert (warm[:k] == 1.0).all(), warm[:k]
+        assert warm[k] > 1.0
+        assert (pending[: k] > 0).any()
+        # zero cold start grows immediately on the same workload
+        tr0 = simulate("adaptive", workload.constant(RATES, 30), FLEET,
+                       ELASTIC, capacity=capacity_config(
+                           "reactive", min_instances=1.0))
+        assert np.asarray(tr0.warm)[0] > 1.0
+
+    def test_cold_start_stall_metric_counts_backlogged_cold_seconds(self):
+        k = 4
+        cap = capacity_config("reactive", cold_start_s=float(k),
+                              min_instances=1.0)
+        s = run_policy("adaptive", workload.constant(RATES, 30), FLEET,
+                       ELASTIC, capacity=cap)
+        assert s.cold_start_stall_time >= 1.0
+        s0 = run_policy("adaptive", workload.constant(RATES, 30), FLEET,
+                        ELASTIC,
+                        capacity=capacity_config("reactive", min_instances=1.0))
+        assert s0.cold_start_stall_time == 0.0
+
+    def test_scale_to_zero_releases_pool_after_keep_alive(self):
+        cap = capacity_config("scale_to_zero", keep_alive_s=5.0)
+        tr = simulate("adaptive", _onoff_arrivals(), FLEET, ELASTIC,
+                      capacity=cap)
+        warm = np.asarray(tr.warm)
+        assert warm[0] >= 1.0
+        assert warm[-1] == 0.0             # pool fully released
+        assert np.asarray(tr.allocation)[-1].sum() == 0.0
+        # billing stopped with the pool: cheaper than the always-on run
+        s = summarize("adaptive", tr, ELASTIC, FLEET.active)
+        fixed = run_policy("adaptive", _onoff_arrivals(), FLEET, ELASTIC,
+                           capacity=capacity_config("fixed"))
+        assert s.cost < fixed.cost
+
+    def test_scale_to_zero_honors_min_instances_while_busy(self):
+        """The configured reactive floor still binds on the busy path;
+        scale-to-zero only overrides it after the keep-alive window."""
+        cap = capacity_config("scale_to_zero", keep_alive_s=5.0,
+                              min_instances=3.0)
+        tr = simulate("adaptive", _onoff_arrivals(on_until=10, scale=0.02),
+                      FLEET, ELASTIC, capacity=cap)
+        warm = np.asarray(tr.warm)
+        assert (warm[1:8] >= 3.0).all(), warm[:8]   # floor binds under load
+        assert warm[-1] == 0.0                      # ...but not when idle
+        ref = simulate_numpy("adaptive",
+                             np.asarray(_onoff_arrivals(on_until=10, scale=0.02)),
+                             FLEET, capacity=cap, num_gpus=ELASTIC.num_gpus)
+        np.testing.assert_allclose(warm.astype(np.float64), ref["warm"],
+                                   atol=1e-5)
+
+    def test_stacked_config_policy_accessor_raises_clearly(self):
+        stacked = stack_capacities(capacity_scenario_library())
+        with pytest.raises(ValueError, match="stacked batch"):
+            stacked.policy
+
+    def test_scale_to_zero_rewarms_on_new_traffic(self):
+        arr = np.zeros((40, 4), np.float32)
+        arr[:5] = np.asarray(PAPER_ARRIVAL_RATES, np.float32) * 0.1
+        arr[30:] = np.asarray(PAPER_ARRIVAL_RATES, np.float32) * 0.1
+        cap = capacity_config("scale_to_zero", keep_alive_s=3.0,
+                              cold_start_s=2.0)
+        tr = simulate("adaptive", jnp.asarray(arr), FLEET, ELASTIC,
+                      capacity=cap)
+        warm = np.asarray(tr.warm)
+        assert (warm[15:30] == 0.0).any()  # slept through the gap
+        assert warm[-1] >= 1.0             # woke up for the second wave
+
+    def test_budget_feasible_under_time_varying_capacity(self):
+        """Σg(t) <= warm(t) and g >= 0 for every policy when the budget is
+        a traced trajectory, not a constant."""
+        import jax
+
+        arr = workload.bursty(RATES, 50, jax.random.key(7))
+        cap = capacity_config("reactive", cold_start_s=2.0, min_instances=0.0)
+        for policy in alloc.policy_names():
+            tr = simulate(policy, arr, FLEET, ELASTIC, capacity=cap)
+            g = np.asarray(tr.allocation)
+            warm = np.asarray(tr.warm)
+            assert (g >= -1e-6).all(), policy
+            assert (g.sum(axis=-1) <= warm * (1 + 1e-4) + 1e-6).all(), policy
+
+
+class TestOracleParity:
+    """The numpy oracle must track the JAX scan under elastic capacity."""
+
+    @pytest.mark.parametrize("policy", alloc.policy_names())
+    def test_reactive_with_cold_start(self, policy):
+        arr = workload.constant(RATES, 50)
+        cap = capacity_config("reactive", cold_start_s=3.0, min_instances=1.0)
+        tr = simulate(policy, arr, FLEET, ELASTIC, capacity=cap)
+        ref = simulate_numpy(policy, np.asarray(arr), FLEET, capacity=cap,
+                             num_gpus=ELASTIC.num_gpus)
+        for field in ("allocation", "served", "queue", "latency", "warm",
+                      "pending"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(tr, field), np.float64), ref[field],
+                rtol=2e-4, atol=2e-3, err_msg=f"{policy}/{field}",
+            )
+
+    @pytest.mark.parametrize("policy", ("adaptive", "water_filling",
+                                        "throughput_greedy"))
+    def test_scale_to_zero(self, policy):
+        arr = _onoff_arrivals()
+        cap = capacity_config("scale_to_zero", keep_alive_s=4.0,
+                              cold_start_s=2.0)
+        tr = simulate(policy, arr, FLEET, ELASTIC, capacity=cap)
+        ref = simulate_numpy(policy, np.asarray(arr), FLEET, capacity=cap,
+                             num_gpus=ELASTIC.num_gpus)
+        for field in ("allocation", "served", "queue", "latency", "warm",
+                      "pending"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(tr, field), np.float64), ref[field],
+                rtol=2e-4, atol=2e-3, err_msg=f"{policy}/{field}",
+            )
+
+
+class TestValidation:
+    def test_budget_above_ceiling_rejected(self):
+        with pytest.raises(ValueError, match="ceiling"):
+            SimConfig(g_total=4.0, num_gpus=2.0)
+
+    def test_cold_start_beyond_horizon_rejected(self):
+        cap = capacity_config("reactive",
+                              cold_start_s=float(COLD_START_HORIZON))
+        with pytest.raises(ValueError, match="cold_start"):
+            check_capacity(cap, 1.0, 8.0)
+
+    def test_min_instances_above_ceiling_rejected(self):
+        cap = capacity_config("reactive", min_instances=9.0)
+        with pytest.raises(ValueError, match="min_instances"):
+            check_capacity(cap, 1.0, 8.0)
+
+    def test_simulate_checks_capacity_eagerly(self):
+        cap = capacity_config("reactive",
+                              cold_start_s=float(COLD_START_HORIZON + 5))
+        with pytest.raises(ValueError, match="cold_start"):
+            simulate("adaptive", workload.constant(RATES, 5), FLEET,
+                     ELASTIC, capacity=cap)
+
+
+class TestSweepCapacityGrid:
+    @pytest.fixture(scope="class")
+    def grid(self):
+        scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=40, seed=0)
+        return scenarios, sweep_capacity(
+            FLEET, scenarios=scenarios, config=ELASTIC
+        )
+
+    def test_grid_shape_and_axis_names(self, grid):
+        scenarios, res = grid
+        c = len(capacity_scenario_library())
+        p, w = len(alloc.policy_names()), len(scenarios)
+        assert res.metrics.shape == (c, p, w, len(METRIC_NAMES))
+        assert res.capacity_names == tuple(
+            cc.name for cc in capacity_scenario_library()
+        )
+        assert np.isfinite(res.metrics).all()
+
+    def test_cells_match_run_policy(self, grid):
+        scenarios, res = grid
+        caps = {c.name: c for c in capacity_scenario_library()}
+        for cap_name in ("fixed", "reactive_cold"):
+            got = res.summary("adaptive", "constant", capacity=cap_name)
+            want = run_policy("adaptive", scenarios[0].arrivals, FLEET,
+                              ELASTIC, capacity=caps[cap_name])
+            assert abs(got.avg_latency - want.avg_latency) < 1e-3, cap_name
+            assert abs(got.cost - want.cost) < 1e-6, cap_name
+            assert abs(got.mean_warm_instances
+                       - want.mean_warm_instances) < 1e-4, cap_name
+
+    def test_cost_constant_under_fixed_but_not_under_elastic(self, grid):
+        _, res = grid
+        cost = res.metric("cost")  # (C, P, W)
+        fixed = res.capacity_names.index("fixed")
+        assert np.ptp(cost[fixed]) < 1e-9
+        for scen in ("diurnal", "bursty"):
+            w = res.scenario_names.index(scen)
+            for cap_name in ("reactive", "reactive_cold", "scale_to_zero"):
+                c = res.capacity_names.index(cap_name)
+                spread = cost[c, :, w].max() - cost[c, :, w].min()
+                assert spread > 0.0, (cap_name, scen)
+
+    def test_table_and_best_carry_capacity_axis(self, grid):
+        _, res = grid
+        table = res.table()
+        assert table.columns[0] == "capacity"
+        assert "cost" in table.columns
+        best = table.best("cost")
+        assert set(best) == {
+            f"{c}/{s}" for c in res.capacity_names for s in res.scenario_names
+        }
+
+    def test_duplicate_capacity_names_rejected(self):
+        caps = (capacity_config("fixed"), capacity_config("fixed"))
+        with pytest.raises(ValueError, match="unique"):
+            sweep_capacity(FLEET, caps,
+                           scenarios=(Scenario(
+                               "constant", workload.constant(RATES, 10)),),
+                           config=ELASTIC)
+
+    def test_stacked_config_leaves_are_batched(self):
+        stacked = stack_capacities(capacity_scenario_library())
+        assert stacked.policy_id.shape == (4,)
+        assert stacked.cold_start_s.shape == (4,)

@@ -17,12 +17,16 @@ invariants with a fixed RNG either way.
 """
 import hypothesis
 import hypothesis.strategies as st
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import allocator as alloc
+from repro.core import workload
 from repro.core.agents import pad_fleet, synthetic_fleet
+from repro.core.capacity import capacity_config
+from repro.core.simulator import SimConfig, simulate
 
 # Policies that honor per-agent minimum guarantees; which agents count as
 # "busy" depends on the demand signal each policy actually reads.
@@ -91,3 +95,41 @@ def test_policy_invariants_deterministic(n_real, n_pad):
         if case == 4:
             q[:] = 0.0
         _run_case(n_real, n_pad, seed=case, g_total=1.0, lam_vals=lam, q_vals=q)
+
+
+@hypothesis.given(
+    n=st.integers(2, 8),
+    seed=st.integers(0, 5),
+    cap_policy=st.sampled_from(("reactive", "scale_to_zero")),
+    cold=st.integers(0, 6),
+    target_rate=st.floats(20.0, 120.0),
+    keep_alive=st.floats(0.0, 8.0),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_budget_feasible_under_time_varying_traced_budget(
+    n, seed, cap_policy, cold, target_rate, keep_alive
+):
+    """Under the serverless capacity layer the budget is a traced
+    trajectory g_total(t) = warm(t) — including exact zeros when the pool
+    sleeps.  Every registered policy must still emit Σg(t) <= g_total(t)
+    and g >= 0 at every step, not just under the constant budget the
+    original invariants were written against.  (Deterministic coverage of
+    the same invariant: tests/test_capacity.py.)
+    """
+    fleet = synthetic_fleet(n, seed=seed)
+    rates = workload.synthetic_rates(n, seed=seed)
+    arr = workload.bursty(rates, 30, jax.random.key(seed))
+    cap = capacity_config(
+        cap_policy, cold_start_s=float(cold),
+        target_rate_per_instance=target_rate, keep_alive_s=keep_alive,
+    )
+    config = SimConfig(g_total=1.0, num_gpus=6.0)
+    for policy in alloc.policy_names():
+        tr = simulate(policy, arr, fleet, config, capacity=cap)
+        g = np.asarray(tr.allocation)
+        warm = np.asarray(tr.warm)
+        assert not np.isnan(g).any(), policy
+        assert (g >= -1e-6).all(), (policy, g.min())
+        assert (g.sum(axis=-1) <= warm * (1 + 1e-4) + 1e-6).all(), (
+            policy, (g.sum(axis=-1) - warm).max(),
+        )

@@ -29,7 +29,13 @@ from repro.core.routing import (
     stack_workflows,
     synthetic_workflow,
 )
-from repro.core.simulator import METRIC_NAMES, run_policy, simulate, trace_metrics
+from repro.core.simulator import (
+    METRIC_NAMES,
+    SimConfig,
+    run_policy,
+    simulate,
+    trace_metrics,
+)
 from repro.core.sweep import (
     Scenario,
     scenario_library,
@@ -317,7 +323,7 @@ class TestWorkflowMetrics:
     def test_sink_throughput_counts_exits_only(self):
         wf = pipeline_chain(4)
         tr = simulate("static_equal", ARR, FLEET, workflow=wf)
-        vec, _, _, _ = trace_metrics(tr, FLEET.active, wf)
+        vec, _, _, _ = trace_metrics(tr, FLEET.active, wf, config=SimConfig())
         m = dict(zip(METRIC_NAMES, np.asarray(vec)))
         # only the tail stage exits; total throughput counts every stage
         assert m["sink_throughput"] < m["total_throughput"]
@@ -329,7 +335,7 @@ class TestWorkflowMetrics:
     def test_critical_path_exceeds_max_stage_latency_on_chain(self):
         wf = pipeline_chain(4)
         tr = simulate("static_equal", ARR, FLEET, workflow=wf)
-        vec, per_lat, _, _ = trace_metrics(tr, FLEET.active, wf)
+        vec, per_lat, _, _ = trace_metrics(tr, FLEET.active, wf, config=SimConfig())
         m = dict(zip(METRIC_NAMES, np.asarray(vec)))
         # the chain's critical path is the sum of all stage latencies
         np.testing.assert_allclose(

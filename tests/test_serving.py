@@ -8,6 +8,7 @@ from repro.configs import get_config
 from repro.core import allocator as alloc
 from repro.core import routing
 from repro.core.agents import AgentSpec, Fleet
+from repro.core.capacity import billing_cost, capacity_config
 from repro.models.model import build_model
 from repro.serving.engine import AgentRuntime, FleetEngine
 
@@ -166,6 +167,56 @@ class TestWorkflowRouting:
             eng.submit("slow", np.arange(4), 2)
         # sources still accept outside traffic
         eng.submit("fast", np.arange(4), 2)
+
+
+class TestWarmPoolGating:
+    """The engine analogue of the simulator's capacity layer: the warm
+    pool gates the per-tick token budget."""
+
+    def test_scale_to_zero_stops_serving_and_billing(self):
+        cap = capacity_config("scale_to_zero", keep_alive_s=2.0,
+                              target_rate_per_instance=4.0,
+                              backlog_per_instance=4.0)
+        eng = _engine("adaptive", capacity=cap, num_gpus=4.0)
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            eng.submit("fast", rng.integers(0, 50, 4), 2)
+            eng.step()
+        for _ in range(12):     # drain, then idle past the keep-alive
+            eng.step()
+        warm = [h["warm"] for h in eng.history]
+        assert warm[0] >= 1.0
+        assert warm[-1] == 0.0
+        # a sleeping pool allocates nothing and decodes nothing
+        tail = eng.history[-1]
+        assert sum(tail["allocation"]) == 0.0
+        assert sum(tail["decode_tokens"]) == 0.0
+        m = eng.metrics()
+        assert m["warm_instance_ticks"] < eng.tick  # cheaper than always-on
+        assert abs(m["cost_usd"]
+                   - billing_cost(m["warm_instance_ticks"],
+                                  eng.price_per_hour)) < 1e-12
+
+    def test_reactive_pool_expands_token_budget(self):
+        """With warm > 1 the fleet-wide allocation may exceed 1.0 — the
+        per-instance budget_tokens scales with the pool."""
+        cap = capacity_config("reactive", target_rate_per_instance=1.0,
+                              backlog_per_instance=2.0, min_instances=1.0)
+        eng = _engine("water_filling", capacity=cap, num_gpus=3.0)
+        rng = np.random.default_rng(1)
+        for _ in range(6):
+            for _ in range(3):
+                eng.submit("fast", rng.integers(0, 50, 4), 2)
+            eng.step()
+        warm = [h["warm"] for h in eng.history]
+        assert max(warm) > 1.0
+        assert max(warm) <= 3.0 + 1e-9
+        for h in eng.history:   # budget gated by the tick's warm pool
+            assert sum(h["allocation"]) <= h["warm"] + 1e-4
+
+    def test_engine_rejects_budget_above_ceiling(self):
+        with pytest.raises(ValueError, match="ceiling"):
+            _engine("adaptive", g_total=2.0, num_gpus=1.0)
 
 
 def test_allocation_capacity_every_tick():
