@@ -1,0 +1,145 @@
+"""Stable-schema ``BENCH_*.json`` writers — the perf trajectory record.
+
+Benchmarks that track a hot path additionally write a flat machine-diffable
+file at the **repo root** (``BENCH_<name>.json``) so future PRs can compare
+wall time and memory against the numbers this PR measured on the same
+machine.  In smoke mode the file goes to ``experiments/smoke/`` instead —
+liveness-only reduced-config numbers must never clobber the repo-root
+trajectory record (the same segregation .gitignore enforces for the other
+smoke artifacts); CI's bench-smoke upload covers both locations.  The
+schema is deliberately boring and append-only:
+
+    {
+      "benchmark": "...",          # writer module
+      "schema_version": 1,         # bump only on breaking layout changes
+      "smoke": false,              # reduced CI configuration?
+      "backend": "cpu",
+      "device_count": 1,
+      "entries": [ {flat str/number dict per measured grid}, ... ]
+    }
+
+Per-entry keys are the writer's contract; the two current writers
+(``fleet_scaling``, ``sweep_grid``) emit ``kernel`` ("streaming"|"trace"),
+``wall_us``, ``us_per_step``, ``us_per_step_per_cell``, ``cells``,
+``num_steps``.  The best-effort memory probes below appear only on entries
+where the reading is attributable (``fleet_scaling``'s ``memory_probe``
+grid, which runs before anything heavier, and the ``frontier`` grid) —
+``ru_maxrss`` is a process-wide high-water mark, so stamping it on every
+timing entry would just echo the largest earlier run.  CI's bench-smoke
+job uploads the smoke-mode copies per push.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+
+from benchmarks import _smoke
+
+SCHEMA_VERSION = 1
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def time_device(fn, reps: int) -> float:
+    """Mean wall time (us) over ``reps`` calls, after a warmup/compile call.
+
+    ``fn`` must return device arrays (``return_arrays=True``);
+    ``jax.block_until_ready`` waits for the device work itself instead of
+    round-tripping through ``np.asarray`` host copies — the one timing
+    methodology for every BENCH writer.
+    """
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def live_bytes() -> int:
+    """Total bytes of currently-live device arrays (``jax.live_arrays``).
+
+    Measured while a mode's outputs are still referenced, this is the
+    resident footprint the caller pays to *hold* a result — the number that
+    separates trace materialization (O(S·N) per cell) from streaming
+    accumulation (O(N) per cell).
+    """
+    return int(sum(int(getattr(x, "nbytes", 0)) for x in jax.live_arrays()))
+
+
+def peak_bytes() -> int | None:
+    """Backend-reported peak allocation (``device.memory_stats``), covering
+    XLA's transient scratch too; ``None`` when the backend (notably CPU)
+    does not report memory stats."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    peak = stats.get("peak_bytes_in_use")
+    return int(peak) if peak else None
+
+
+def max_rss_bytes() -> int:
+    """Process high-water-mark RSS (``ru_maxrss``) in bytes.
+
+    The only peak probe that sees XLA's *transient* buffers on the CPU
+    backend (``memory_stats`` is None there).  It is monotone — a high-water
+    mark, never a current reading — so measure cheap modes before expensive
+    ones: a mode's reading is only attributable to it when it *raises* the
+    mark.
+    """
+    import resource
+
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":  # bytes on macOS, KiB on Linux
+        return int(rss)
+    return int(rss) * 1024
+
+
+def timing_entry(
+    grid: str, kernel: str, n: int, num_steps: int, cells: int,
+    wall_us: float, **extra,
+) -> dict:
+    """One timing entry in the contract schema — the single constructor
+    every writer uses, so the per-entry keys cannot drift between files.
+    ``extra`` adds attributable-only fields (e.g. ``max_rss_bytes``)."""
+    return {
+        "grid": grid, "kernel": kernel, "n": n, "num_steps": num_steps,
+        "cells": cells, "wall_us": wall_us,
+        "us_per_step": wall_us / num_steps,
+        "us_per_step_per_cell": wall_us / (num_steps * cells),
+        "peak_device_bytes": peak_bytes(),
+        **extra,
+    }
+
+
+def write(name: str, entries: list[dict], out_dir: str | None = None) -> str:
+    """Write ``BENCH_<name>.json``; returns the path.
+
+    Destination: ``out_dir`` when the caller passed an explicit one (an
+    ad-hoc run redirecting its artifacts must not clobber the committed
+    record), else ``experiments/smoke/`` in smoke mode (reduced-config
+    numbers never overwrite the trajectory record), else the repo root.
+    """
+    if out_dir is None and _smoke.smoke():
+        out_dir = os.path.join(REPO_ROOT, "experiments", "smoke")
+    if out_dir is not None:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"BENCH_{name}.json")
+    else:
+        path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    payload = {
+        "benchmark": name,
+        "schema_version": SCHEMA_VERSION,
+        "smoke": _smoke.smoke(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "entries": entries,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    return path

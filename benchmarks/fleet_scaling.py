@@ -1,14 +1,26 @@
 """System-level O(N) claim: full jitted sweep wall time per simulated step
-vs fleet size.
+vs fleet size — streaming kernel vs the trace-based oracle.
 
 The paper argues Algorithm 1 is O(N); ``allocator_scaling`` times the bare
 allocator.  This benchmark times the *whole evaluation surface* — the jitted
-(policy × scenario) sweep over ``simulate_core``, i.e. allocator + queue
+(policy × scenario) sweep over the simulator, i.e. allocator + queue
 dynamics + metric reductions — per simulated step at N ∈ {4, 8, 16, 64,
-256} agents, plus the single batched (fleet × policy × scenario) grid that
-covers every size at once through the padded/masked fleet axis.
+256} agents, for BOTH grid kernels: the streaming default (O(P) policy
+dispatch, metrics accumulated in the scan carry) and the trace-materializing
+oracle (vmapped ``lax.switch``, P² policy evaluations per grid).  It also
+times the single batched (fleet × policy × scenario) grid that covers every
+size at once through the padded/masked fleet axis, probes peak process
+memory to show the streaming kernel's footprint does not grow with the
+horizon, and — outside smoke mode — runs the N=1024, S=10⁴ frontier grid
+that trace materialization made infeasible.
 
-Writes ``experiments/paper/fleet_scaling.json``.
+Timing blocks on the jitted device output (``jax.block_until_ready`` via
+``return_arrays=True``) so wall times measure device work, not dispatch +
+host transfer.
+
+Writes ``experiments/paper/fleet_scaling.json`` and the stable-schema
+``BENCH_fleet_scaling.json`` at the repo root (see ``benchmarks/_bench.py``)
+so future PRs can track the speedup.
 """
 from __future__ import annotations
 
@@ -16,73 +28,203 @@ import json
 import os
 import time
 
-from benchmarks import _smoke
+import jax
+
+from benchmarks import _bench, _smoke
+from repro.core import allocator as alloc
 from repro.core import workload
 from repro.core.agents import synthetic_fleet
-from repro.core.sweep import scenario_library, sweep, sweep_fleets
+from repro.core.sweep import (
+    fleet_scenario_library,
+    scenario_library,
+    sweep,
+    sweep_fleets,
+)
 
 FLEET_SIZES = (4, 8, 16, 64, 256)
 NUM_STEPS = 50
 SEED = 0
 REPS = 20          # timing samples per per-fleet grid
 BATCHED_REPS = 3   # the batched grid covers all sizes at once; it is slow
+# The frontier grid: long-horizon fleet scale that only the streaming
+# kernel can reach (trace mode would materialize ~18 GB of trajectories).
+FRONTIER_N = 1024
+FRONTIER_STEPS = 10_000
+# Memory probe: the same grid at a 10x horizon; streaming peak memory must
+# stay flat while trace materialization grows linearly.
+MEMORY_PROBE_N = 256
+MEMORY_HORIZONS = (50, 500)
 
 
-def _time(fn, reps: int) -> float:
-    """Mean wall time (us) over ``reps`` calls, after a warmup/compile call."""
-    fn()
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        fn()
-    return (time.perf_counter() - t0) / reps * 1e6
+def _measure_memory_flatness(entries: list) -> dict:
+    """Peak-RSS growth with the horizon, per kernel.
+
+    ``ru_maxrss`` is a monotone high-water mark, so modes run cheapest
+    first: streaming at S then 10S (flat by construction — the carry is
+    O(N)), then the trace kernel with ``keep_traces=True`` at 10S, whose
+    (S, N)-leaf materialization is what raises the mark.
+    """
+    n_probe = 64 if _smoke.smoke() else MEMORY_PROBE_N
+    fleet = synthetic_fleet(n_probe, seed=n_probe)
+    rates = workload.synthetic_rates(n_probe, seed=n_probe)
+    horizons = tuple(_smoke.steps(s) for s in MEMORY_HORIZONS)
+    probe = {}
+    cases = [
+        ("streaming", horizons[0], {}),
+        ("streaming", horizons[1], {}),
+        ("trace_keep_traces", horizons[1], {"keep_traces": True, "stream": False}),
+    ]
+    for kernel, steps, kwargs in cases:
+        scenarios = scenario_library(rates, num_steps=steps, seed=SEED)
+        out = sweep(fleet, scenarios, return_arrays=True, **kwargs)
+        jax.block_until_ready(out)
+        live = _bench.live_bytes()
+        rss = _bench.max_rss_bytes()
+        del out
+        probe[f"{kernel}_s{steps}"] = {"max_rss_bytes": rss, "live_bytes": live}
+        entries.append({
+            "grid": "memory_probe", "kernel": kernel, "n": n_probe,
+            "num_steps": steps, "max_rss_bytes": rss, "live_bytes": live,
+            "peak_device_bytes": _bench.peak_bytes(),
+        })
+    return probe
 
 
 def run(out_dir: str | None = None) -> list[str]:
+    bench_dir = out_dir  # explicit destination redirects BENCH files too
     out_dir = _smoke.out_dir() if out_dir is None else out_dir
     sizes = _smoke.sizes(FLEET_SIZES)
     num_steps = _smoke.steps(NUM_STEPS)
+    reps = _smoke.reps(REPS, 2)
     per_fleet = {}
+    entries: list[dict] = []
+    # The memory probe runs FIRST: ru_maxrss is a process-wide monotone
+    # high-water mark, so its per-case readings are only attributable while
+    # no heavier grid has run yet.  (The timing entries below deliberately
+    # carry no max_rss field for the same reason.)
+    memory = _measure_memory_flatness(entries)
     fleets = [synthetic_fleet(n, seed=n) for n in sizes]
+    num_policies = len(alloc.policy_names())
     for n, fleet in zip(sizes, fleets):
         rates = workload.synthetic_rates(n, seed=n)
         scenarios = scenario_library(rates, num_steps=num_steps, seed=SEED)
-        wall_us = _time(lambda: sweep(fleet, scenarios), _smoke.reps(REPS, 2))
-        res = sweep(fleet, scenarios)
-        cells = len(res.policy_names) * len(res.scenario_names)
+        cells = num_policies * len(scenarios)
+        wall = {}
+        for kernel, fn in (
+            ("streaming",
+             lambda: sweep(fleet, scenarios, return_arrays=True)),
+            ("trace",
+             lambda: sweep(fleet, scenarios, stream=False, return_arrays=True)),
+        ):
+            wall[kernel] = _bench.time_device(fn, reps)
+            entries.append(_bench.timing_entry(
+                "per_fleet", kernel, n, num_steps, cells, wall[kernel]
+            ))
         per_fleet[n] = {
-            "grid_us": wall_us,
-            "us_per_step": wall_us / num_steps,
-            "us_per_step_per_cell": wall_us / (num_steps * cells),
+            "grid_us": wall["streaming"],
+            "us_per_step": wall["streaming"] / num_steps,
+            "us_per_step_per_cell": wall["streaming"] / (num_steps * cells),
             "cells": cells,
+            "trace_grid_us": wall["trace"],
+            "stream_speedup": wall["trace"] / wall["streaming"],
         }
 
     # The batched path: every fleet size in ONE padded (F, P, W) grid,
     # sharded across jax.devices().
     rate_vectors = [workload.synthetic_rates(n, seed=n) for n in sizes]
-    batched_us = _time(
-        lambda: sweep_fleets(fleets, rate_vectors, num_steps=num_steps, seed=SEED),
-        _smoke.reps(BATCHED_REPS, 1),
-    )
-    res = sweep_fleets(fleets, rate_vectors, num_steps=num_steps, seed=SEED)
+    batched_wall = {}
+    for kernel, stream in (("streaming", True), ("trace", False)):
+        batched_wall[kernel] = _bench.time_device(
+            lambda: sweep_fleets(
+                fleets, rate_vectors, num_steps=num_steps, seed=SEED,
+                stream=stream, return_arrays=True,
+            ),
+            _smoke.reps(BATCHED_REPS, 1),
+        )
     batched = {
-        "grid_us": batched_us,
-        "us_per_step": batched_us / num_steps,
+        "grid_us": batched_wall["streaming"],
+        "us_per_step": batched_wall["streaming"] / num_steps,
+        "trace_grid_us": batched_wall["trace"],
+        "stream_speedup": batched_wall["trace"] / batched_wall["streaming"],
         "fleets": len(sizes),
         "padded_width": max(sizes),
-        "cells": int(res.metrics[..., 0].size),
+        # Count scenarios from the library sweep_fleets actually runs (a
+        # 1-fleet build at the smallest size — names only, no grid work).
+        "cells": len(sizes) * num_policies * len(
+            fleet_scenario_library(rate_vectors[:1], fleets[0].num_agents,
+                                   num_steps, SEED)[0]
+        ),
     }
+    for kernel in ("streaming", "trace"):
+        entries.append(_bench.timing_entry(
+            "batched", kernel, max(sizes), num_steps, batched["cells"],
+            batched_wall[kernel],
+        ))
+
+    frontier = None
+    if not _smoke.smoke():
+        # Previously infeasible: N=1024 agents over a 10^4-step horizon —
+        # trace mode would materialize 56 cells x 8 (S, N) leaves (~18 GB);
+        # the streaming carry keeps the whole grid at O(P · W · N).
+        # Feasibility runs through the full sweep_fleets entry point
+        # (end-to-end wall clock, prep included); the kernel timing then
+        # hoists fleet + scenario generation out of the timed region like
+        # every per_fleet entry, so the rows stay comparable.
+        frontier_fleet = synthetic_fleet(FRONTIER_N, seed=FRONTIER_N)
+        t0 = time.perf_counter()
+        out = sweep_fleets(
+            [frontier_fleet], num_steps=FRONTIER_STEPS, seed=SEED,
+            return_arrays=True,
+        )
+        jax.block_until_ready(out)
+        entry_point_us = (time.perf_counter() - t0) * 1e6
+        cells = int(out[0][..., 0].size)
+        del out
+        frontier_scenarios = scenario_library(
+            workload.synthetic_rates(FRONTIER_N, seed=SEED),
+            num_steps=FRONTIER_STEPS, seed=SEED,
+        )
+        wall_us = _bench.time_device(
+            lambda: sweep(frontier_fleet, frontier_scenarios,
+                          return_arrays=True),
+            1,
+        )
+        frontier = {
+            "n": FRONTIER_N, "num_steps": FRONTIER_STEPS,
+            "grid_us": wall_us, "us_per_step": wall_us / FRONTIER_STEPS,
+            "sweep_fleets_end_to_end_us": entry_point_us,
+            "cells": cells,
+        }
+        entries.append(_bench.timing_entry(
+            "frontier", "streaming", FRONTIER_N, FRONTIER_STEPS, cells,
+            wall_us, max_rss_bytes=_bench.max_rss_bytes(),
+            sweep_fleets_end_to_end_us=entry_point_us,
+        ))
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fleet_scaling.json"), "w") as fh:
         json.dump(
-            {"num_steps": num_steps, "per_fleet": per_fleet, "batched": batched},
+            {
+                "num_steps": num_steps,
+                "per_fleet": per_fleet,
+                "batched": batched,
+                "memory_probe": memory,
+                "frontier": frontier,
+            },
             fh, indent=1,
         )
+    _bench.write("fleet_scaling", entries, out_dir=bench_dir)
 
     lo, hi = min(sizes), max(sizes)
     growth = per_fleet[hi]["us_per_step"] / per_fleet[lo]["us_per_step"]
-    return [
+    out = [
         f"scaling/sweep_step_n{lo},{per_fleet[lo]['us_per_step']:.1f},cells={per_fleet[lo]['cells']}",
         f"scaling/sweep_step_n{hi},{per_fleet[hi]['us_per_step']:.1f},growth_{hi // lo}x_agents={growth:.1f}x",
-        f"scaling/fleet_grid,{batched_us:.1f},fleets={len(sizes)};padded_n={hi}",
+        f"scaling/stream_speedup_n{hi},{per_fleet[hi]['stream_speedup']:.2f},trace_us={per_fleet[hi]['trace_grid_us']:.1f}",
+        f"scaling/fleet_grid,{batched_wall['streaming']:.1f},fleets={len(sizes)};padded_n={hi};speedup={batched['stream_speedup']:.2f}x",
     ]
+    if frontier is not None:
+        out.append(
+            f"scaling/frontier_n{FRONTIER_N},{frontier['us_per_step']:.1f},steps={FRONTIER_STEPS}"
+        )
+    return out

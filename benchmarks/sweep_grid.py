@@ -1,32 +1,47 @@
 """Full policy × scenario sweep: every registered policy against the
 standard 8-scenario library in one vmapped/jitted call.
 
-Reports the wall time of the whole grid (compile excluded) and the winning
-policy per scenario by average latency — the scaled-up version of the
-paper's Table II comparison."""
+Reports the wall time of the whole grid for both kernels — the streaming
+default (O(P) policy dispatch, carry-accumulated metrics) and the
+trace-materializing oracle — and the winning policy per scenario by average
+latency, the scaled-up version of the paper's Table II comparison.  Timing
+blocks on the jitted device output (``jax.block_until_ready`` via
+``return_arrays=True``), so the numbers measure device work rather than
+dispatch + host copy.
+
+Writes ``experiments/paper/sweep_grid.json`` and the stable-schema
+``BENCH_sweep.json`` at the repo root (see ``benchmarks/_bench.py``)."""
 from __future__ import annotations
 
 import json
 import os
-import time
 
-from benchmarks import _smoke
+from benchmarks import _bench, _smoke
 from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
 from repro.core.sweep import scenario_library, sweep
 
+REPS = 20
+
 
 def run(out_dir: str | None = None) -> list[str]:
+    bench_dir = out_dir  # explicit destination redirects BENCH files too
     out_dir = _smoke.out_dir() if out_dir is None else out_dir
     fleet = paper_fleet()
-    scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=_smoke.steps(100), seed=0)
-    res = sweep(fleet, scenarios)  # warmup: compiles the grid
-    t0 = time.perf_counter()
+    num_steps = _smoke.steps(100)
+    scenarios = scenario_library(PAPER_ARRIVAL_RATES, num_steps=num_steps, seed=0)
+    reps = _smoke.reps(REPS, 2)
+    wall = {}
+    for kernel, fn in (
+        ("streaming", lambda: sweep(fleet, scenarios, return_arrays=True)),
+        ("trace",
+         lambda: sweep(fleet, scenarios, stream=False, return_arrays=True)),
+    ):
+        wall[kernel] = _bench.time_device(fn, reps)
     res = sweep(fleet, scenarios)
-    us = (time.perf_counter() - t0) * 1e6
+    cells = len(res.policy_names) * len(res.scenario_names)
 
     table = res.table()
     best = table.best("avg_latency")
-    cells = len(res.policy_names) * len(res.scenario_names)
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "sweep_grid.json"), "w") as fh:
@@ -34,13 +49,25 @@ def run(out_dir: str | None = None) -> list[str]:
             {
                 "policies": list(res.policy_names),
                 "scenarios": list(res.scenario_names),
+                "grid_us": wall["streaming"],
+                "trace_grid_us": wall["trace"],
+                "stream_speedup": wall["trace"] / wall["streaming"],
                 "best_by_avg_latency": best,
                 "rows": [dict(zip(table.columns, row)) for row in table.rows],
             },
             fh, indent=1,
         )
+    _bench.write("sweep", [
+        _bench.timing_entry(
+            "paper_fleet", kernel, fleet.num_agents, num_steps, cells, us
+        )
+        for kernel, us in wall.items()
+    ], out_dir=bench_dir)
 
-    out = [f"sweep/grid,{us:.1f},cells={cells}"]
+    out = [
+        f"sweep/grid,{wall['streaming']:.1f},cells={cells}",
+        f"sweep/grid_trace,{wall['trace']:.1f},speedup={wall['trace'] / wall['streaming']:.2f}x",
+    ]
     for scen, pol in best.items():
         lat = res.summary(pol, scen).avg_latency
         out.append(f"sweep/best_{scen},0,policy={pol};lat={lat:.1f}")

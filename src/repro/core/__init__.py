@@ -16,6 +16,7 @@ from repro.core.allocator import (
     get_policy,
     policy_id,
     policy_names,
+    policy_stack,
     policy_switch,
     predictive_adaptive,
     register_policy,
@@ -51,12 +52,17 @@ from repro.core.routing import (
 )
 from repro.core.simulator import (
     METRIC_NAMES,
+    MetricAccum,
     SimConfig,
     SimSummary,
     SimTrace,
+    accumulate_metrics,
+    finalize_metrics,
+    init_metric_accum,
     run_policy,
     simulate,
     simulate_core,
+    simulate_stream_core,
     summarize,
     trace_metrics,
 )
@@ -80,9 +86,12 @@ __all__ = [
     "POLICY_NAMES", "adaptive_allocation", "predictive_adaptive",
     "round_robin", "static_equal", "throughput_greedy", "water_filling",
     "register_policy", "policy_names", "policy_id", "get_policy", "dispatch",
-    "policy_switch", "ObjectiveWeights", "step_objective", "POLICY_IDS",
+    "policy_stack", "policy_switch", "ObjectiveWeights", "step_objective",
+    "POLICY_IDS",
     "SimConfig", "SimSummary", "SimTrace", "run_policy", "simulate",
-    "simulate_core", "summarize", "trace_metrics", "workload", "METRIC_NAMES",
+    "simulate_core", "simulate_stream_core", "summarize", "trace_metrics",
+    "MetricAccum", "accumulate_metrics", "finalize_metrics",
+    "init_metric_accum", "workload", "METRIC_NAMES",
     "Scenario", "SweepResult", "SweepSummary", "fleet_scenario_library",
     "scenario_library", "sweep", "sweep_fleets",
     "routing", "Workflow", "coordinator_star", "hierarchical",

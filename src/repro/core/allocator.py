@@ -332,6 +332,39 @@ def policy_switch(
     return jax.lax.switch(policy_id, branches)
 
 
+def policy_stack(
+    t: jnp.ndarray,
+    lam_obs: jnp.ndarray,
+    lam_ema: jnp.ndarray,
+    queue: jnp.ndarray,
+    fleet: "Fleet",
+    g_total,
+    names: Sequence[str] | None = None,
+) -> jnp.ndarray:
+    """Evaluate each named policy exactly once on its own (P, N) state row.
+
+    The streaming sweep kernel's dispatch (``simulator.simulate_stream_core``):
+    the grid's policy axis is the name order, so instead of vmapping a
+    ``lax.switch`` over policy ids — which lowers to evaluate-ALL-branches-
+    and-select, P² allocator evaluations per grid — the registry is unrolled
+    and policy ``names[i]`` sees only row ``i`` of the batched state.  O(P)
+    policy evaluations per step, by construction.
+
+    ``lam_obs`` / ``lam_ema`` / ``queue`` carry a leading policy axis (P, N);
+    ``g_total`` is either one shared budget (python float or traced scalar)
+    or a per-policy (P,) vector of traced warm-pool budgets (each policy row
+    drives its own autoscaler trajectory under elastic capacity).
+    """
+    names = policy_names() if names is None else tuple(names)
+    per_row_budget = jnp.ndim(g_total) == 1
+    rows = []
+    for i, name in enumerate(names):
+        fn = get_policy(name)
+        budget = g_total[i] if per_row_budget else g_total
+        rows.append(fn(t, lam_obs[i], lam_ema[i], queue[i], fleet, budget))
+    return jnp.stack(rows)
+
+
 # Every entry gates its inputs with ``fleet.active`` and hard-masks its
 # output, so padded slots contribute zero demand and receive exactly g = 0.
 

@@ -46,12 +46,21 @@ are registered pytrees, so a (fleets × policies × workloads) or
 arrivals are gated by ``fleet.active`` and every metric reduction is
 mask-weighted, so a padded fleet reports the same numbers as its unpadded
 original.
+
+**Streaming mode** (``simulate_stream_core``) is the sweep grids' hot
+path: the whole policy axis runs inside one scan (each registered policy
+dispatched exactly once per step via ``allocator.policy_stack``) and the
+METRIC_NAMES reductions accumulate in the carry (``MetricAccum``), so no
+(S, N) trajectory is ever materialized — ``trace_metrics`` and the
+streaming carry share one finalizer (``finalize_metrics``), keeping
+exactly one metric definition.  ``simulate``/``simulate_core`` remain the
+single-run, trace-producing API.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -196,6 +205,58 @@ class SimSummary:
         )
 
 
+def _routing_terms(workflow: Workflow | None, fleet: Fleet, arrivals: jnp.ndarray):
+    """Shared scan prep: gate exogenous arrivals, precompute routing terms.
+
+    With ``workflow=None`` the routing terms are ``None`` — the scan body's
+    signal to skip the endogenous path entirely (see ``_queue_step``).
+    """
+    if workflow is None:
+        return None, None, arrivals * fleet.active
+    route_eff = workflow.route * workflow.fan_out[..., :, None]  # forwarded copies
+    exit_frac = jnp.maximum(1.0 - workflow.route.sum(axis=-1), 0.0)
+    return route_eff, exit_frac, arrivals * fleet.active * workflow.source
+
+
+def _queue_step(
+    queue: jnp.ndarray,
+    lam: jnp.ndarray,
+    g: jnp.ndarray,
+    fleet: Fleet,
+    config: SimConfig,
+    route_eff: jnp.ndarray | None,
+    exit_frac: jnp.ndarray | None,
+):
+    """One step of the serving/queueing physics — THE definition, shared by
+    the trace scan (``simulate_core``) and the streaming scan
+    (``simulate_stream_core``); the state arrays may carry a leading policy
+    axis (broadcasting handles both).
+
+    ``route_eff=None`` is the workflow-free fast path: the routing matrix
+    would be the N×N zero matrix and ``exit_frac`` identically 1, so the
+    ``served @ route`` contraction burns O(N²) multiplies per step producing
+    exact zeros.  Skipping it keeps the output bit-for-bit (``served · 1.0
+    == served``, and the endogenous term was exactly zero already) — the
+    no-op guarantee regression-tested in tests/test_routing.py.
+    """
+    capacity_rps = g * fleet.base_throughput
+    served = jnp.minimum(capacity_rps, queue + lam)
+    new_queue = queue + lam - served
+    latency = jnp.minimum(
+        new_queue / jnp.maximum(capacity_rps, _EPS), config.latency_cap
+    )
+    if route_eff is None:
+        completed = served
+        new_endo = jnp.zeros_like(served)
+    else:
+        completed = served * exit_frac  # row deficit exits the workflow
+        # Routed mass arrives downstream next step; the active gate keeps
+        # padded slots inert even if a route column points at one (the
+        # misrouted mass is dropped, exactly like gated exogenous traffic).
+        new_endo = (served @ route_eff) * fleet.active
+    return served, new_queue, latency, completed, new_endo
+
+
 def simulate_core(
     policy_id: jnp.ndarray,
     arrivals: jnp.ndarray,
@@ -228,15 +289,7 @@ def simulate_core(
     """
     names = alloc.policy_names() if policy_names is None else tuple(policy_names)
     n = fleet.num_agents
-    if workflow is None:
-        route = jnp.zeros((n, n), jnp.float32)
-        source = jnp.ones(n, jnp.float32)
-        fan_out = jnp.ones(n, jnp.float32)
-    else:
-        route, source, fan_out = workflow.route, workflow.source, workflow.fan_out
-    arrivals = arrivals * fleet.active * source
-    route_eff = route * fan_out[..., :, None]   # forwarded copies
-    exit_frac = jnp.maximum(1.0 - route.sum(axis=-1), 0.0)
+    route_eff, exit_frac, arrivals = _routing_terms(workflow, fleet, arrivals)
     elastic = capacity is not None
 
     def step(carry, inp):
@@ -260,17 +313,9 @@ def simulate_core(
         g = alloc.policy_switch(
             policy_id, t, lam, lam_ema, queue, fleet, g_total_t, names
         )
-        capacity_rps = g * fleet.base_throughput
-        served = jnp.minimum(capacity_rps, queue + lam)
-        new_queue = queue + lam - served
-        latency = jnp.minimum(
-            new_queue / jnp.maximum(capacity_rps, _EPS), config.latency_cap
+        served, new_queue, latency, completed, new_endo = _queue_step(
+            queue, lam, g, fleet, config, route_eff, exit_frac
         )
-        completed = served * exit_frac  # row deficit exits the workflow
-        # Routed mass arrives downstream next step; the active gate keeps
-        # padded slots inert even if a route column points at one (the
-        # misrouted mass is dropped, exactly like gated exogenous traffic).
-        new_endo = (served @ route_eff) * fleet.active
         warm_t = jnp.asarray(g_total_t, jnp.float32)
         new_carry = (
             (new_queue, lam_ema, new_endo, cstate) if elastic
@@ -321,6 +366,109 @@ def simulate(
     )
 
 
+def simulate_stream_core(
+    arrivals: jnp.ndarray,
+    fleet: Fleet,
+    config: SimConfig,
+    policy_names: Sequence[str] | None = None,
+    workflow: Workflow | None = None,
+    capacity: CapacityConfig | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused streaming scan: every named policy's trajectory AND its metric
+    reductions in ONE pass, materializing no per-step traces.
+
+    The sweep grids' hot path (``core/sweep.py``).  Two structural changes
+    versus vmapping ``simulate_core`` over a policy axis:
+
+    * **O(P) dispatch** — under ``vmap`` the per-step ``lax.switch`` lowers
+      to evaluate-all-branches-and-select, so each of P policy rows computes
+      all P policies (P² allocator evaluations per step).  Here the policy
+      axis lives *inside* the scan as a (P, N) state stack and
+      ``alloc.policy_stack`` dispatches each named policy exactly once per
+      step, on its own row.
+    * **O(1)-in-time memory** — the carry folds each step's outputs straight
+      into a ``MetricAccum`` (running METRIC_NAMES sums); nothing of shape
+      (S, ·) is ever materialized, so peak memory per cell is O(P · N)
+      however long the horizon.
+
+    Physics (``_queue_step``), EMA seeding, the autoscaler
+    (``capacity_step``, vmapped over the policy rows — each policy's queue
+    trajectory drives its own warm pool) and the metric finalizer
+    (``finalize_metrics``) are all shared with the trace-based path, which
+    remains the parity oracle: streaming metrics match
+    ``trace_metrics(simulate_core(...))`` within float tolerance
+    (tests/test_streaming.py).
+
+    Returns ``(metrics (P, M), per-agent latency (P, N), per-agent
+    throughput (P, N), per-agent queue (P, N))`` with P = len(policy_names)
+    in name order and M = len(METRIC_NAMES).
+    """
+    names = alloc.policy_names() if policy_names is None else tuple(policy_names)
+    p, n = len(names), fleet.num_agents
+    route_eff, exit_frac, arrivals = _routing_terms(workflow, fleet, arrivals)
+    elastic = capacity is not None
+    if elastic:
+        # vmap over the policy rows only; the config itself is shared.  The
+        # inner ``lax.switch`` keeps its unbatched index, so no branch blowup.
+        cap_step = jax.vmap(
+            cap_mod.capacity_step, in_axes=(0, None, None, 0, 0, 0, None, None)
+        )
+
+    def step(carry, inp):
+        if elastic:
+            queue, lam_ema, endo, acc, cstate = carry
+        else:
+            queue, lam_ema, endo, acc = carry
+        t, lam_exo = inp
+        lam = lam_exo + endo            # (P, N) total intake per policy row
+        lam_ema = jnp.where(
+            t > 0, alloc.ema_forecast(lam_ema, lam, config.ema_alpha), lam_ema
+        )
+        if elastic:
+            cstate, g_total_t, pending_t = cap_step(
+                cstate, capacity, t, lam.sum(axis=-1), lam_ema.sum(axis=-1),
+                queue.sum(axis=-1), config.g_total, config.num_gpus,
+            )
+        else:
+            g_total_t = config.g_total  # static python float: the pre-capacity program
+            pending_t = jnp.zeros((p,), jnp.float32)
+        g = alloc.policy_stack(t, lam, lam_ema, queue, fleet, g_total_t, names)
+        served, new_queue, latency, completed, new_endo = _queue_step(
+            queue, lam, g, fleet, config, route_eff, exit_frac
+        )
+        warm_t = jnp.broadcast_to(jnp.asarray(g_total_t, jnp.float32), (p,))
+        acc = accumulate_metrics(
+            acc, fleet.active, g, served, new_queue, latency, completed,
+            warm_t, pending_t,
+        )
+        new_carry = (
+            (new_queue, lam_ema, new_endo, acc, cstate) if elastic
+            else (new_queue, lam_ema, new_endo, acc)
+        )
+        return new_carry, None
+
+    num_steps = arrivals.shape[0]
+    ts = jnp.arange(num_steps)
+    init = (
+        jnp.zeros((p, n), jnp.float32),
+        jnp.broadcast_to(arrivals[0], (p, n)),  # EMA seed, as in simulate_core
+        jnp.zeros((p, n), jnp.float32),
+        init_metric_accum(n, (p,)),
+    )
+    if elastic:
+        init = init + (jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (p,) + x.shape),
+            cap_mod.init_capacity_state(config.g_total),
+        ),)
+    carry, _ = jax.lax.scan(step, init, (ts, arrivals))
+    acc = carry[3]
+    return jax.vmap(
+        lambda a: finalize_metrics(
+            a, num_steps, fleet.active, workflow, config=config
+        )
+    )(acc)
+
+
 # Order of the metric vector returned by trace_metrics (and of the metric
 # axis in sweep grids).  Capacity metrics (cost included — it is now
 # policy-dependent) live at the end so index-based consumers of the original
@@ -365,6 +513,102 @@ def critical_path_latency(
     return (cp * workflow.source * mask).max()
 
 
+class MetricAccum(NamedTuple):
+    """Running METRIC_NAMES reductions — the streaming scan's metric carry.
+
+    Everything ``trace_metrics`` needs, as O(N) running sums instead of
+    (S, N) trajectories: peak memory per cell is independent of the horizon.
+    Leaves may carry a leading policy axis (the streaming kernel accumulates
+    all P policies at once).
+    """
+
+    lat_sum: jnp.ndarray        # (..., N) Σ_t latency
+    served_sum: jnp.ndarray     # (..., N) Σ_t served
+    queue_sum: jnp.ndarray      # (..., N) Σ_t queue
+    completed_sum: jnp.ndarray  # (..., N) Σ_t completed
+    alloc_sum: jnp.ndarray      # (...,)   Σ_t Σ_i g_i
+    warm_sum: jnp.ndarray       # (...,)   Σ_t warm(t) — warm-instance-seconds
+    stall_steps: jnp.ndarray    # (...,)   steps with pending > 0 and backlog
+
+
+def init_metric_accum(num_agents: int, batch_shape: tuple = ()) -> MetricAccum:
+    """Zero accumulator for ``batch_shape`` cells of ``num_agents`` agents."""
+    agent = jnp.zeros(batch_shape + (num_agents,), jnp.float32)
+    scalar = jnp.zeros(batch_shape, jnp.float32)
+    return MetricAccum(agent, agent, agent, agent, scalar, scalar, scalar)
+
+
+def accumulate_metrics(
+    acc: MetricAccum,
+    mask: jnp.ndarray,
+    g: jnp.ndarray,
+    served: jnp.ndarray,
+    queue: jnp.ndarray,
+    latency: jnp.ndarray,
+    completed: jnp.ndarray,
+    warm: jnp.ndarray,
+    pending: jnp.ndarray,
+) -> MetricAccum:
+    """Fold one step's outputs into the running sums (O(N) work/memory)."""
+    backlogged = (queue * mask).sum(axis=-1) > 0
+    return MetricAccum(
+        lat_sum=acc.lat_sum + latency,
+        served_sum=acc.served_sum + served,
+        queue_sum=acc.queue_sum + queue,
+        completed_sum=acc.completed_sum + completed,
+        alloc_sum=acc.alloc_sum + g.sum(axis=-1),
+        warm_sum=acc.warm_sum + warm,
+        stall_steps=acc.stall_steps
+        + ((pending > 0) & backlogged).astype(jnp.float32),
+    )
+
+
+def finalize_metrics(
+    acc: MetricAccum,
+    num_steps: int,
+    active: jnp.ndarray | None = None,
+    workflow: Workflow | None = None,
+    *,
+    config: SimConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """METRIC_NAMES reductions from the running sums — THE metric
+    definition (unbatched; ``vmap`` it over a policy axis).
+
+    ``trace_metrics`` feeds it sums over a materialized trace, the
+    streaming scan feeds it the accumulated carry — either way there is
+    exactly one formula per metric, so the two modes cannot drift.
+
+    Returns (metric vector in METRIC_NAMES order, per-agent mean latency,
+    per-agent mean throughput, per-agent mean queue).
+    """
+    m = jnp.ones(acc.lat_sum.shape[-1]) if active is None else active
+    n_active = jnp.maximum(m.sum(), 1.0)
+    mmean = lambda x: (x * m).sum() / n_active  # masked mean over agents
+    per_lat = acc.lat_sum / num_steps
+    per_tput = acc.served_sum / num_steps
+    per_queue = acc.queue_sum / num_steps
+    # Unclipped long-run latency: mean backlog over long-run service rate.
+    longrun_rate = jnp.maximum(per_tput, _EPS)
+    littles = mmean(per_queue / longrun_rate)
+    lat_mean = mmean(per_lat)
+    lat_std = jnp.sqrt(mmean((per_lat - lat_mean) ** 2))
+    vec = jnp.stack([
+        lat_mean,
+        lat_std,
+        per_tput.sum(),
+        acc.alloc_sum / num_steps,
+        mmean(per_queue),
+        littles,
+        (acc.completed_sum / num_steps * m).sum(),
+        critical_path_latency(per_lat, workflow, m),
+        billing_cost(acc.warm_sum, config.price_per_hour),
+        acc.alloc_sum / jnp.maximum(acc.warm_sum, _EPS),
+        acc.stall_steps,
+        acc.warm_sum / num_steps,
+    ])
+    return vec, per_lat, per_tput, per_queue
+
+
 def trace_metrics(
     trace: SimTrace,
     active: jnp.ndarray | None = None,
@@ -374,10 +618,13 @@ def trace_metrics(
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Table II + workflow + capacity reductions for one trace, jit/vmap-safe.
 
-    Returns (metric vector in METRIC_NAMES order, per-agent mean latency,
-    per-agent mean throughput, per-agent mean queue — the per-stage backlog
-    of a workflow pipeline).  The single definition behind both
-    ``summarize`` and the sweep grids.
+    Reduces the trace to a ``MetricAccum`` and finalizes — a thin wrapper
+    over ``finalize_metrics``, the same finalizer the streaming scan uses,
+    so trace mode and streaming mode share one metric definition.  Returns
+    (metric vector in METRIC_NAMES order, per-agent mean latency, per-agent
+    mean throughput, per-agent mean queue — the per-stage backlog of a
+    workflow pipeline).  The single definition behind both ``summarize``
+    and the sweep grids.
 
     ``active`` is the fleet's validity mask: per-agent means/stds weight by
     it, so padded slots (latency 0, throughput 0) never dilute the metrics.
@@ -394,34 +641,19 @@ def trace_metrics(
     serverless tax no provisioned-cost model can see.
     """
     m = jnp.ones(trace.latency.shape[-1]) if active is None else active
-    n_active = jnp.maximum(m.sum(), 1.0)
-    mmean = lambda x: (x * m).sum() / n_active  # masked mean over agents
-    per_lat = trace.latency.mean(axis=0)
-    per_tput = trace.served.mean(axis=0)
-    per_queue = trace.queue.mean(axis=0)
-    completed = trace.completed  # == served when nothing is routed
-    # Unclipped long-run latency: mean backlog over long-run service rate.
-    longrun_rate = jnp.maximum(per_tput, _EPS)
-    littles = mmean(per_queue / longrun_rate)
-    lat_mean = mmean(per_lat)
-    lat_std = jnp.sqrt(mmean((per_lat - lat_mean) ** 2))
-    warm_seconds = trace.warm.sum()  # 1 s steps: Σ_t warm(t) · 1 s
     backlogged = (trace.queue * m).sum(axis=-1) > 0
-    vec = jnp.stack([
-        lat_mean,
-        lat_std,
-        per_tput.sum(),
-        trace.allocation.sum(axis=1).mean(),
-        mmean(per_queue),
-        littles,
-        (completed.mean(axis=0) * m).sum(),
-        critical_path_latency(per_lat, workflow, m),
-        billing_cost(warm_seconds, config.price_per_hour),
-        trace.allocation.sum() / jnp.maximum(warm_seconds, _EPS),
-        ((trace.pending > 0) & backlogged).sum().astype(jnp.float32),
-        trace.warm.mean(),
-    ])
-    return vec, per_lat, per_tput, per_queue
+    acc = MetricAccum(
+        lat_sum=trace.latency.sum(axis=0),
+        served_sum=trace.served.sum(axis=0),
+        queue_sum=trace.queue.sum(axis=0),
+        completed_sum=trace.completed.sum(axis=0),
+        alloc_sum=trace.allocation.sum(axis=-1).sum(axis=-1),
+        warm_sum=trace.warm.sum(axis=0),  # 1 s steps: Σ_t warm(t) · 1 s
+        stall_steps=((trace.pending > 0) & backlogged).sum().astype(jnp.float32),
+    )
+    return finalize_metrics(
+        acc, trace.latency.shape[0], active, workflow, config=config
+    )
 
 
 def summarize(

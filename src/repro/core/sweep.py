@@ -44,6 +44,21 @@ Per-cell Table II metrics are reduced inside the jit so the host only
 materializes a small (…, P, W, M) grid (plus full traces when
 ``keep_traces=True``).  Adding a policy to the allocator registry or a
 scenario to the library grows the grid with no other edits.
+
+**Streaming grid kernel** (the default whenever ``keep_traces=False``):
+the policy axis is evaluated *inside* the scan by
+``simulator.simulate_stream_core`` — each registered policy dispatched
+exactly once per step on its own state row (``alloc.policy_stack``),
+instead of the vmapped ``lax.switch`` whose lowering evaluates all P
+branches per policy row (P² allocator work per grid) — and the
+METRIC_NAMES reductions accumulate in the scan carry, so peak memory per
+cell is O(P · N) regardless of the horizon instead of materializing all
+eight (S, N) trace leaves.  Pass ``stream=False`` (or ``keep_traces=True``)
+to run the trace-based kernel, which is kept as the parity oracle:
+streaming metrics match it within float tolerance on all four grid types
+(tests/test_streaming.py).  ``return_arrays=True`` on any entry point
+skips the host transfer and returns raw device arrays — the benchmark
+timing surface.
 """
 from __future__ import annotations
 
@@ -73,6 +88,7 @@ from repro.core.simulator import (
     SimSummary,
     SimTrace,
     simulate_core,
+    simulate_stream_core,
     trace_metrics,
 )
 
@@ -309,7 +325,13 @@ def _grid_jit(
     keep_traces: bool,
     batch_axis: str | None,
 ):
-    """The one (policy × scenario) grid kernel behind every sweep.
+    """The trace-based (policy × scenario) grid kernel — the parity oracle.
+
+    Materializes a full ``SimTrace`` per cell (and vmaps the policy axis, so
+    the per-step ``lax.switch`` lowers to evaluate-all-branches: P² policy
+    evaluations per grid).  ``keep_traces=True`` sweeps and
+    ``stream=False`` parity checks run here; the streaming kernel
+    (``_stream_grid_jit``) is the default hot path.
 
     ``batch_axis`` picks the outermost vmapped dimension: None (plain
     ``sweep``), "fleet" (batched fleet leaves + matched per-fleet arrival
@@ -337,6 +359,84 @@ def _grid_jit(
     }[batch_axis]
     return jax.vmap(over_pol, in_axes=outer_axes)(
         fleet, workflow, capacity, pids, arrivals
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("config", "names", "batch_axis")
+)
+def _stream_grid_jit(
+    arrivals: jnp.ndarray,   # (W, S, N), or (F, W, S, N) when batch_axis="fleet"
+    fleet: Fleet,            # leaves (N,), or (F, N) when batch_axis="fleet"
+    workflow: Workflow | None,  # leaves (K, N, N)/(K, N) when batch_axis="workflow"
+    capacity: CapacityConfig | None,  # leaves (C,) when batch_axis="capacity"
+    config: SimConfig,
+    names: tuple,
+    batch_axis: str | None,
+):
+    """The streaming (policy × scenario) grid kernel — the default for
+    ``keep_traces=False`` sweeps.
+
+    Each cell runs ``simulate_stream_core``: the whole policy axis in ONE
+    scan (O(P) dispatch via the unrolled ``alloc.policy_stack`` instead of
+    the vmapped ``lax.switch``'s P² evaluate-all-branches lowering) with
+    metrics accumulated in the carry (peak memory per cell O(P · N), not
+    O(P · S · N)).  Only the scenario axis — and the optional outer
+    fleet/workflow/capacity axis — is vmapped.  ``_grid_jit`` remains the
+    trace-materializing parity oracle.
+    """
+
+    def cell(arr, fl, wf, cp):
+        return simulate_stream_core(arr, fl, config, names, wf, cp)
+
+    # out_axes=1: the per-cell policy axis stays leading, scenarios second,
+    # matching the trace kernel's (…, P, W, ·) layout.
+    over_scen = jax.vmap(cell, in_axes=(0, None, None, None), out_axes=1)
+    if batch_axis is None:
+        return over_scen(arrivals, fleet, workflow, capacity)
+    outer_axes = {
+        "fleet": (0, 0, None, None),
+        "workflow": (None, None, 0, None),
+        "capacity": (None, None, None, 0),
+    }[batch_axis]
+    return jax.vmap(over_scen, in_axes=outer_axes)(
+        arrivals, fleet, workflow, capacity
+    )
+
+
+def _run_grid(
+    pids: jnp.ndarray,
+    arrivals: jnp.ndarray,
+    fleet: Fleet,
+    workflow: Workflow | None,
+    capacity: CapacityConfig | None,
+    config: SimConfig,
+    reg_names: tuple,
+    names: tuple,
+    keep_traces: bool,
+    stream: bool | None,
+    batch_axis: str | None,
+):
+    """Pick the kernel for one sweep call: streaming by default, the
+    trace-based oracle when traces are requested or ``stream=False``.
+
+    Returns the kernel's device-array tuple — (metrics, per-lat, per-tput,
+    per-queue[, traces]).
+    """
+    streamed = (not keep_traces) if stream is None else bool(stream)
+    if streamed and keep_traces:
+        raise ValueError(
+            "streaming mode accumulates metrics in O(1) memory per step and "
+            "never materializes traces; use keep_traces=True with "
+            "stream=False (or leave stream unset)"
+        )
+    if streamed:
+        return _stream_grid_jit(
+            arrivals, fleet, workflow, capacity, config, names, batch_axis
+        )
+    return _grid_jit(
+        pids, arrivals, fleet, workflow, capacity, config, reg_names,
+        keep_traces, batch_axis,
     )
 
 
@@ -371,14 +471,21 @@ def sweep(
     policies: Sequence[str] | None = None,
     keep_traces: bool = False,
     capacity: CapacityConfig | None = None,
-) -> SweepResult:
+    stream: bool | None = None,
+    return_arrays: bool = False,
+) -> SweepResult | tuple:
     """Evaluate ``policies`` (default: the whole registry) × ``scenarios``.
 
     All scenarios must share one (S, N) shape.  The grid is a single jitted
-    ``vmap(policy) ∘ vmap(workload)`` call over ``simulate_core`` (cached
-    across calls with the same fleet structure/config/registry).  An
+    call (cached across calls with the same fleet structure/config/
+    registry): by default the **streaming kernel** (``_stream_grid_jit`` —
+    O(P) policy dispatch, metrics accumulated in the scan carry so peak
+    memory per cell never grows with the horizon); ``keep_traces=True`` or
+    ``stream=False`` selects the trace-materializing oracle kernel.  An
     optional ``capacity`` autoscaler applies to every cell; cost is a
-    per-cell metric either way.
+    per-cell metric either way.  ``return_arrays=True`` skips the host
+    transfer and returns the kernel's raw device arrays — the benchmark
+    timing surface (``jax.block_until_ready`` them to time device work).
     """
     fleet.validate()
     if capacity is not None:
@@ -390,8 +497,10 @@ def sweep(
         [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
     )  # (W, S, N)
 
-    out = _grid_jit(pids, arrivals, fleet, None, capacity, config, reg_names,
-                    keep_traces, None)
+    out = _run_grid(pids, arrivals, fleet, None, capacity, config,
+                       reg_names, names, keep_traces, stream, None)
+    if return_arrays:
+        return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
     traces = out[4] if keep_traces else None
 
@@ -417,7 +526,9 @@ def sweep_fleets(
     fleet_names: Sequence[str] | None = None,
     keep_traces: bool = False,
     shard: bool = True,
-) -> SweepResult:
+    stream: bool | None = None,
+    return_arrays: bool = False,
+) -> SweepResult | tuple:
     """One jitted (fleet × policy × scenario) grid over heterogeneous fleets.
 
     Fleets are padded to the widest member and stacked into a single batched
@@ -427,7 +538,10 @@ def sweep_fleets(
     demand is held constant while the agent count scales).  ``shard=True``
     lays the fleet axis across ``jax.devices()`` (identical metrics on one
     device); the per-fleet rows match the unbatched ``sweep`` within float
-    tolerance.
+    tolerance.  The streaming kernel (default for ``keep_traces=False``)
+    is what makes the long-horizon end of this grid feasible at all: peak
+    memory per cell is O(N), not O(S · N), so N = 1024 fleets over 10⁴-step
+    horizons fit on a single host.
     """
     fleets = list(fleets)
     if not fleets:
@@ -464,8 +578,10 @@ def sweep_fleets(
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
-    out = _grid_jit(pids, arrivals, stacked, None, None, config, reg_names,
-                    keep_traces, "fleet")
+    out = _run_grid(pids, arrivals, stacked, None, None, config,
+                       reg_names, names, keep_traces, stream, "fleet")
+    if return_arrays:
+        return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
     traces = out[4] if keep_traces else None
 
@@ -510,7 +626,9 @@ def sweep_workflows(
     config: SimConfig = SimConfig(),
     policies: Sequence[str] | None = None,
     keep_traces: bool = False,
-) -> SweepResult:
+    stream: bool | None = None,
+    return_arrays: bool = False,
+) -> SweepResult | tuple:
     """One jitted (workflow × policy × scenario) grid over one fleet.
 
     Every workflow must already span the fleet's width (``pad_workflow`` a
@@ -548,10 +666,10 @@ def sweep_workflows(
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
-    out = _grid_jit(
-        pids, arrivals, fleet, stacked_wf, None, config, reg_names, keep_traces,
-        "workflow",
-    )
+    out = _run_grid(pids, arrivals, fleet, stacked_wf, None, config,
+                       reg_names, names, keep_traces, stream, "workflow")
+    if return_arrays:
+        return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
     traces = out[4] if keep_traces else None
 
@@ -616,7 +734,9 @@ def sweep_capacity(
     config: SimConfig = SimConfig(),
     policies: Sequence[str] | None = None,
     keep_traces: bool = False,
-) -> SweepResult:
+    stream: bool | None = None,
+    return_arrays: bool = False,
+) -> SweepResult | tuple:
     """One jitted (capacity × policy × scenario) grid over one fleet.
 
     Capacity configs are stacked into a single batched ``CapacityConfig``
@@ -654,10 +774,10 @@ def sweep_capacity(
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
-    out = _grid_jit(
-        pids, arrivals, fleet, None, stacked_cap, config, reg_names,
-        keep_traces, "capacity",
-    )
+    out = _run_grid(pids, arrivals, fleet, None, stacked_cap, config,
+                       reg_names, names, keep_traces, stream, "capacity")
+    if return_arrays:
+        return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
     traces = out[4] if keep_traces else None
 

@@ -1,19 +1,22 @@
-"""Device-sharded ``sweep_fleets`` coverage.
+"""Device-sharded ``sweep_fleets`` coverage — trace AND streaming kernels.
 
 ROADMAP flagged the sharded fleet axis (1D mesh + NamedSharding in
 ``core/sweep.py``) as never exercised on more than one device.  Two
-complementary tests close that gap:
+complementary tests close that gap, each parametrized over both grid
+kernels so the sharded and streaming paths are exercised together:
 
 * **in-process** — runs when the interpreter already sees >= 2 devices
   (the dedicated CI step sets ``XLA_FLAGS=--xla_force_host_platform_
   device_count=8``); asserts the sharded grid equals the unsharded grid on
   the same devices, with the fleet count chosen divisible by the device
   count so the real ``PartitionSpec("grid")`` layout runs, not the
-  replication fallback.
+  replication fallback.  A cross-kernel check also pins the sharded
+  streaming grid to the sharded trace grid within float tolerance.
 * **subprocess** — always runnable: spawns a fresh interpreter with 8
-  forced host CPU devices and compares its sharded metrics against this
-  process's single-device reference.  Skipped when the in-process variant
-  already covers the path (>= 2 devices), so CI pays for each variant once.
+  forced host CPU devices and compares its sharded metrics (both kernels)
+  against this process's single-device references.  Skipped when the
+  in-process variant already covers the path (>= 2 devices), so CI pays
+  for each variant once.
 """
 import os
 import subprocess
@@ -35,10 +38,11 @@ NUM_STEPS = 12
 POLICIES = ("static_equal", "adaptive", "water_filling")
 
 
-def _grid(shard: bool) -> np.ndarray:
+def _grid(shard: bool, stream: bool) -> np.ndarray:
     fleets = [synthetic_fleet(n, seed=i) for i, n in enumerate(FLEET_SIZES)]
     res = sweep_fleets(
-        fleets, num_steps=NUM_STEPS, seed=0, policies=POLICIES, shard=shard
+        fleets, num_steps=NUM_STEPS, seed=0, policies=POLICIES, shard=shard,
+        stream=stream,
     )
     return res.metrics
 
@@ -48,13 +52,29 @@ def _grid(shard: bool) -> np.ndarray:
     reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
            "(covered by the subprocess variant on single-device runs)",
 )
-def test_sharded_matches_unsharded_in_process():
+@pytest.mark.parametrize("stream", (False, True), ids=("trace", "streaming"))
+def test_sharded_matches_unsharded_in_process(stream):
     assert len(FLEET_SIZES) % jax.device_count() == 0, (
         "fleet count must divide the device count to exercise the real "
         "sharded layout instead of the replication fallback"
     )
     np.testing.assert_allclose(
-        _grid(shard=True), _grid(shard=False), rtol=1e-5, atol=1e-6
+        _grid(shard=True, stream=stream), _grid(shard=False, stream=stream),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(covered by the subprocess variant on single-device runs)",
+)
+def test_sharded_streaming_matches_sharded_trace_in_process():
+    """The two kernels must agree on the device-sharded grid too — the
+    streaming default cannot silently drift once a mesh is involved."""
+    np.testing.assert_allclose(
+        _grid(shard=True, stream=True), _grid(shard=True, stream=False),
+        rtol=1e-3, atol=1e-3,
     )
 
 
@@ -65,9 +85,10 @@ from repro.core.sweep import sweep_fleets
 import jax
 assert jax.device_count() == 8, jax.devices()
 fleets = [synthetic_fleet(n, seed=i) for i, n in enumerate({sizes})]
-res = sweep_fleets(fleets, num_steps={steps}, seed=0, policies={policies},
-                   shard=True)
-np.save({out!r}, res.metrics)
+for stream, out in ((False, {out_trace!r}), (True, {out_stream!r})):
+    res = sweep_fleets(fleets, num_steps={steps}, seed=0, policies={policies},
+                       shard=True, stream=stream)
+    np.save(out, res.metrics)
 """
 
 
@@ -76,7 +97,11 @@ np.save({out!r}, res.metrics)
     reason="in-process variant already exercises the multi-device path",
 )
 def test_sharded_8_device_subprocess_matches_single_device():
-    reference = _grid(shard=True)  # single device: identity placement
+    # Single device: identity placement — the sharded path is a no-op.
+    references = {
+        False: _grid(shard=True, stream=False),
+        True: _grid(shard=True, stream=True),
+    }
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     env["JAX_PLATFORMS"] = "cpu"
@@ -84,14 +109,20 @@ def test_sharded_8_device_subprocess_matches_single_device():
         env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
     ).strip()
     with tempfile.TemporaryDirectory() as tmp:
-        out = os.path.join(tmp, "metrics.npy")
+        out_trace = os.path.join(tmp, "metrics_trace.npy")
+        out_stream = os.path.join(tmp, "metrics_stream.npy")
         script = _CHILD.format(
-            sizes=FLEET_SIZES, steps=NUM_STEPS, policies=POLICIES, out=out
+            sizes=FLEET_SIZES, steps=NUM_STEPS, policies=POLICIES,
+            out_trace=out_trace, out_stream=out_stream,
         )
         proc = subprocess.run(
             [sys.executable, "-c", script], env=env, capture_output=True,
             text=True, timeout=600,
         )
         assert proc.returncode == 0, (proc.stdout, proc.stderr)
-        sharded = np.load(out)
-    np.testing.assert_allclose(sharded, reference, rtol=1e-5, atol=1e-6)
+        sharded = {False: np.load(out_trace), True: np.load(out_stream)}
+    for stream, reference in references.items():
+        np.testing.assert_allclose(
+            sharded[stream], reference, rtol=1e-5, atol=1e-6,
+            err_msg=f"stream={stream}",
+        )

@@ -1,0 +1,247 @@
+"""Streaming sweep kernel: parity with the trace-based oracle.
+
+The streaming kernel (``simulator.simulate_stream_core`` +
+``sweep._stream_grid_jit``) replaces the vmapped ``lax.switch`` (P² policy
+evaluations per grid under the evaluate-all-branches lowering) with an
+unrolled per-policy stack, and accumulates the METRIC_NAMES reductions in
+the scan carry instead of materializing (S, N) traces.  The trace-based
+path is kept as the parity oracle; these tests pin the acceptance
+criterion: streaming metrics match it within float tolerance for every
+registered policy on all four grid types, including under a workflow
+topology and an elastic capacity config.
+
+Tolerances are float32 accumulation-order noise: the streaming carry sums
+sequentially where the trace path tree-reduces, and ``latency_std``
+amplifies the difference through cancellation at the ~1000 s latency cap.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import importlib
+
+from repro.core import allocator as alloc
+from repro.core import routing
+from repro.core import workload
+from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet, synthetic_fleet
+from repro.core.capacity import capacity_config
+from repro.core.simulator import (
+    METRIC_NAMES,
+    SimConfig,
+    simulate,
+    simulate_stream_core,
+    trace_metrics,
+)
+from repro.core.sweep import (
+    scenario_library,
+    sweep,
+    sweep_capacity,
+    sweep_fleets,
+    sweep_workflows,
+)
+
+# The package re-exports the ``sweep`` *function* under the submodule's
+# name, so reach the module itself through importlib.
+sweep_mod = importlib.import_module("repro.core.sweep")
+
+FLEET = paper_fleet()
+RTOL, ATOL = 1e-3, 1e-3
+
+ELASTIC = capacity_config(
+    "reactive", cold_start_s=3.0, min_instances=1.0, name="reactive_cold"
+)
+
+
+def _assert_grids_match(streamed, traced, label):
+    assert streamed.metrics.shape == traced.metrics.shape, label
+    np.testing.assert_allclose(
+        streamed.metrics, traced.metrics, rtol=RTOL, atol=ATOL, err_msg=label
+    )
+    np.testing.assert_allclose(
+        streamed.per_agent_latency, traced.per_agent_latency,
+        rtol=RTOL, atol=ATOL, err_msg=label,
+    )
+    np.testing.assert_allclose(
+        streamed.per_agent_throughput, traced.per_agent_throughput,
+        rtol=RTOL, atol=ATOL, err_msg=label,
+    )
+    np.testing.assert_allclose(
+        streamed.per_agent_queue, traced.per_agent_queue,
+        rtol=RTOL, atol=ATOL, err_msg=label,
+    )
+
+
+class TestStreamingIsDefault:
+    def test_keep_traces_false_routes_to_streaming_kernel(self, monkeypatch):
+        calls = []
+        real = sweep_mod._stream_grid_jit
+
+        def spy(*args, **kwargs):
+            calls.append(1)
+            return real(*args, **kwargs)
+
+        monkeypatch.setattr(sweep_mod, "_stream_grid_jit", spy)
+        scen = scenario_library(PAPER_ARRIVAL_RATES, num_steps=10, seed=0)
+        sweep(FLEET, scen)
+        assert calls, "keep_traces=False must default to the streaming kernel"
+
+    def test_keep_traces_true_uses_trace_kernel(self, monkeypatch):
+        monkeypatch.setattr(
+            sweep_mod, "_stream_grid_jit",
+            lambda *a, **k: pytest.fail("trace sweep hit the streaming kernel"),
+        )
+        scen = scenario_library(PAPER_ARRIVAL_RATES, num_steps=10, seed=0)
+        res = sweep(FLEET, scen[:1], keep_traces=True)
+        assert res.traces is not None
+
+    def test_stream_with_keep_traces_rejected(self):
+        scen = scenario_library(PAPER_ARRIVAL_RATES, num_steps=10, seed=0)
+        with pytest.raises(ValueError, match="streaming"):
+            sweep(FLEET, scen, keep_traces=True, stream=True)
+
+
+class TestGridParity:
+    """Acceptance: streaming matches the trace oracle on all four grids."""
+
+    def test_sweep(self):
+        scen = scenario_library(PAPER_ARRIVAL_RATES, num_steps=40, seed=0)
+        _assert_grids_match(
+            sweep(FLEET, scen), sweep(FLEET, scen, stream=False), "sweep"
+        )
+
+    def test_sweep_with_capacity(self):
+        scen = scenario_library(PAPER_ARRIVAL_RATES, num_steps=40, seed=0)
+        _assert_grids_match(
+            sweep(FLEET, scen, capacity=ELASTIC),
+            sweep(FLEET, scen, capacity=ELASTIC, stream=False),
+            "sweep+capacity",
+        )
+
+    def test_sweep_fleets(self):
+        fleets = [synthetic_fleet(n, seed=n) for n in (2, 3, 5)]
+        _assert_grids_match(
+            sweep_fleets(fleets, num_steps=25, seed=0),
+            sweep_fleets(fleets, num_steps=25, seed=0, stream=False),
+            "sweep_fleets",
+        )
+
+    def test_sweep_workflows(self):
+        _assert_grids_match(
+            sweep_workflows(FLEET, num_steps=25, seed=0),
+            sweep_workflows(FLEET, num_steps=25, seed=0, stream=False),
+            "sweep_workflows",
+        )
+
+    def test_sweep_capacity(self):
+        _assert_grids_match(
+            sweep_capacity(FLEET, num_steps=25, seed=0),
+            sweep_capacity(FLEET, num_steps=25, seed=0, stream=False),
+            "sweep_capacity",
+        )
+
+    def test_policy_subset(self):
+        scen = scenario_library(PAPER_ARRIVAL_RATES, num_steps=20, seed=0)
+        pols = ("water_filling", "round_robin")
+        streamed = sweep(FLEET, scen, policies=pols)
+        traced = sweep(FLEET, scen, policies=pols, stream=False)
+        assert streamed.policy_names == pols
+        _assert_grids_match(streamed, traced, "policy subset")
+
+
+class TestStreamCoreAgainstSingleRuns:
+    """Row i of the streaming stack must be policy names[i]'s own run —
+    exactly one dispatch per registered policy, against ``simulate`` (the
+    single-run ``lax.switch`` path, untouched by this kernel)."""
+
+    ARR = workload.poisson(
+        jnp.asarray(PAPER_ARRIVAL_RATES, jnp.float32), 50, jax.random.key(7)
+    )
+
+    @pytest.mark.parametrize(
+        "workflow,capacity",
+        [
+            (None, None),
+            (routing.coordinator_star(4), None),
+            (None, ELASTIC),
+            (routing.pipeline_chain(4), ELASTIC),
+        ],
+        ids=("plain", "workflow", "capacity", "workflow+capacity"),
+    )
+    def test_every_policy_row_matches_its_simulate(self, workflow, capacity):
+        cfg = SimConfig()
+        names = alloc.policy_names()
+        vec, per_lat, per_tput, per_q = simulate_stream_core(
+            self.ARR, FLEET, cfg, names, workflow, capacity
+        )
+        assert vec.shape == (len(names), len(METRIC_NAMES))
+        for i, name in enumerate(names):
+            tr = simulate(name, self.ARR, FLEET, cfg, workflow, capacity)
+            want, want_lat, want_tput, want_q = trace_metrics(
+                tr, FLEET.active, workflow, config=cfg
+            )
+            np.testing.assert_allclose(
+                np.asarray(vec[i]), np.asarray(want),
+                rtol=RTOL, atol=ATOL, err_msg=name,
+            )
+            np.testing.assert_allclose(
+                np.asarray(per_lat[i]), np.asarray(want_lat),
+                rtol=RTOL, atol=ATOL, err_msg=name,
+            )
+            np.testing.assert_allclose(
+                np.asarray(per_tput[i]), np.asarray(want_tput),
+                rtol=RTOL, atol=ATOL, err_msg=name,
+            )
+            np.testing.assert_allclose(
+                np.asarray(per_q[i]), np.asarray(want_q),
+                rtol=RTOL, atol=ATOL, err_msg=name,
+            )
+
+
+@hypothesis.given(
+    n=st.integers(2, 4),
+    seed=st.integers(0, 10),
+    # Discrete horizons so examples share compiled scans instead of paying
+    # one XLA compile per drawn shape.
+    num_steps=st.sampled_from((12, 30)),
+    topology=st.sampled_from(("none", "star", "chain", "synthetic")),
+    elastic=st.booleans(),
+)
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_streaming_matches_trace_metrics_property(
+    n, seed, num_steps, topology, elastic
+):
+    """Property acceptance bar: streaming-mode metrics equal trace-mode
+    ``trace_metrics`` within float tolerance for EVERY registered policy ×
+    the full 8-scenario library, under randomized fleet width, seed,
+    horizon, workflow topology, and elastic capacity."""
+    fleet = synthetic_fleet(n, seed=seed)
+    rates = workload.synthetic_rates(n, seed=seed)
+    scenarios = scenario_library(rates, num_steps=num_steps, seed=seed)
+    workflow = {
+        "none": None,
+        "star": routing.coordinator_star(n),
+        "chain": routing.pipeline_chain(n),
+        "synthetic": routing.synthetic_workflow(n, seed=seed),
+    }[topology]
+    capacity = ELASTIC if elastic else None
+    cfg = SimConfig()
+    names = alloc.policy_names()
+    arrivals = jnp.stack(
+        [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
+    )
+    for w, scen in enumerate(scenarios):
+        vec, _, _, _ = simulate_stream_core(
+            arrivals[w], fleet, cfg, names, workflow, capacity
+        )
+        for i, name in enumerate(names):
+            tr = simulate(name, arrivals[w], fleet, cfg, workflow, capacity)
+            want, _, _, _ = trace_metrics(
+                tr, fleet.active, workflow, config=cfg
+            )
+            np.testing.assert_allclose(
+                np.asarray(vec[i]), np.asarray(want), rtol=5e-3, atol=5e-3,
+                err_msg=f"{name}/{scen.name}/{topology}/elastic={elastic}",
+            )
