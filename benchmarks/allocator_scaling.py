@@ -5,17 +5,19 @@ sizes driven through the mask-aware policy registry on padded synthetic
 fleets (half the slots masked off), showing the agent-validity mask adds no
 asymptotic cost.  See ``benchmarks/fleet_scaling.py`` for the system-level
 (full sweep per simulated step) version of the claim.
+
+Timings land in stable-schema ``BENCH_allocator.json`` (``_bench.write``)
+— one entry per (size × kernel), ``kernel`` ∈ {``allocator_raw``,
+``allocator_masked_registry``} — replacing the old ad-hoc
+``allocator_scaling.json`` dict so the numbers are diffable against future
+PRs like every other perf surface.
 """
 from __future__ import annotations
-
-import json
-import os
-import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks import _smoke
+from benchmarks import _bench, _smoke
 from repro.core import allocator as alloc
 from repro.core.agents import pad_fleet, synthetic_fleet
 from repro.core.allocator import adaptive_allocation
@@ -24,25 +26,20 @@ SIZES = (4, 16, 64, 256, 1024, 4096)
 REPS = 200
 
 
-def _time(fn, *args) -> float:
-    fn(*args).block_until_ready()  # warmup/compile
-    reps = _smoke.reps(REPS, 5)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        fn(*args).block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6
-
-
 def run(out_dir: str | None = None) -> list[str]:
-    out_dir = _smoke.out_dir() if out_dir is None else out_dir
+    reps = _smoke.reps(REPS, 5)
     raw, masked = {}, {}
+    entries = []
     for n in _smoke.sizes(SIZES):
         key = jax.random.key(n)
         lam = jax.random.uniform(key, (n,), minval=1.0, maxval=100.0)
         mins = jnp.full((n,), 0.5 / n)
         pri = jnp.ones((n,))
         f = jax.jit(lambda l, m, p: adaptive_allocation(l, m, p))
-        raw[n] = _time(f, lam, mins, pri)
+        raw[n] = _bench.time_device(lambda: f(lam, mins, pri), reps)
+        entries.append(_bench.timing_entry(
+            f"n{n}", "allocator_raw", n, 1, 1, raw[n]
+        ))
 
         # Registry path: n live agents padded into 2n masked slots.
         fleet = pad_fleet(synthetic_fleet(n, seed=n), 2 * n)
@@ -53,11 +50,15 @@ def run(out_dir: str | None = None) -> list[str]:
         g = jax.jit(
             lambda t, lo, le, q, fl: alloc.policy_switch(pid, t, lo, le, q, fl, 1.0, names)
         )
-        masked[n] = _time(g, jnp.asarray(0), lam_p, lam_p, zeros, fleet)
+        masked[n] = _bench.time_device(
+            lambda: g(jnp.asarray(0), lam_p, lam_p, zeros, fleet), reps
+        )
+        entries.append(_bench.timing_entry(
+            f"n{n}", "allocator_masked_registry", n, 1, 1, masked[n],
+            padded_slots=2 * n,
+        ))
 
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "allocator_scaling.json"), "w") as fh:
-        json.dump({"raw_us": raw, "masked_registry_us": masked}, fh, indent=1)
+    _bench.write("allocator", entries, out_dir=out_dir)
     # sub-millisecond at paper scale; growth factor smallest -> largest size
     lo, hi = min(raw), max(raw)
     growth = raw[hi] / raw[lo]

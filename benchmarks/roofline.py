@@ -2,7 +2,11 @@
 
 Reads experiments/roofline/*.json (scan-corrected, per-device) and
 experiments/dryrun/*.json (whole-step compile proof + memory_analysis) and
-emits the markdown table embedded in EXPERIMENTS.md.
+emits the markdown table embedded in EXPERIMENTS.md — plus, whenever rows
+exist, a stable-schema ``BENCH_roofline.json`` (one entry per arch/shape
+with the modeled compute/memory/collective seconds and bottleneck) so the
+roofline numbers are machine-diffable against future PRs instead of living
+only in a markdown table.
 """
 from __future__ import annotations
 
@@ -10,7 +14,7 @@ import glob
 import json
 import os
 
-from benchmarks import _smoke
+from benchmarks import _bench, _smoke
 from repro.launch.mesh import HW
 
 MOVE_DOWN = {
@@ -49,14 +53,36 @@ def markdown_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def bench_entries(rows: list[dict]) -> list[dict]:
+    """Roofline rows in the flat ``_bench`` entry shape: modeled seconds
+    per resource (not a timing loop, so ``wall_us`` carries the bottleneck
+    resource's modeled time — the step-time floor the model predicts)."""
+    entries = []
+    for d in rows:
+        r = d["roofline_s"]
+        entries.append({
+            "grid": f"{d['arch']}/{d['shape']}",
+            "kernel": "roofline_model",
+            "wall_us": r[d["bottleneck"]] * 1e6,
+            "compute_s": r["compute"],
+            "memory_s": r["memory"],
+            "collective_s": r["collective"],
+            "bottleneck": d["bottleneck"],
+            "model_flops_global": d["model_flops_global"],
+            "useful_flops_ratio": d["useful_flops_ratio"],
+        })
+    return entries
+
+
 def run(out_dir: str | None = None) -> list[str]:
-    out_dir = _smoke.out_dir() if out_dir is None else out_dir
+    table_dir = _smoke.out_dir() if out_dir is None else out_dir
     rows = load_rows()
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "roofline_table.md"), "w") as fh:
+    os.makedirs(table_dir, exist_ok=True)
+    with open(os.path.join(table_dir, "roofline_table.md"), "w") as fh:
         fh.write(markdown_table(rows) + "\n")
     if not rows:
         return ["roofline/table,0,rows=0 (run repro.launch.roofline first)"]
+    _bench.write("roofline", bench_entries(rows), out_dir=out_dir)
     worst = min(rows, key=lambda d: d["useful_flops_ratio"])
     bn = {}
     for d in rows:

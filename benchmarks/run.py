@@ -21,6 +21,7 @@ from benchmarks import (
     fleet_scaling,
     robustness,
     roofline,
+    scaling_frontier,
     serverless_elasticity,
     serving_engine,
     sweep_grid,
@@ -39,6 +40,7 @@ MODULES = (
     ("fleet_scaling", fleet_scaling),
     ("roofline", roofline),
     ("serving_engine", serving_engine),
+    ("scaling_frontier", scaling_frontier),
 )
 
 

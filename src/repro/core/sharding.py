@@ -1,0 +1,215 @@
+"""2D device-mesh layer for the sweep grids — mesh, padding, placement.
+
+The sweep evaluation surface is a (batch × policy × scenario) grid of
+*independent* cells, which makes it embarrassingly shardable: this module
+owns how that grid is laid out across devices so ``core/sweep.py`` can stay
+about orchestration.
+
+**Mesh.** ``grid_mesh()`` builds (and caches — one ``jax.make_mesh`` per
+process, not per sweep call) a 2D mesh over all live devices with axes
+
+    ("data", "grid")
+
+where ``data`` carries the batched sweep axis (fleet | workflow | capacity)
+and ``grid`` carries the scenario axis — the largest axis in every
+paper-style grid, which the previous 1D layout left fully replicated on
+every device.  The device count is factored near-square with the larger
+factor on ``grid`` (8 devices → 2 × 4), so scenario-major grids parallelize
+even when the batch axis is tiny.
+
+**Divisibility.** A sharded axis must divide its mesh axis.  Instead of the
+old silent whole-axis replication fallback (which forfeits *all*
+parallelism — 6 fleets on 4 devices ran 4× redundantly), non-divisible axes
+are **padded** to the next multiple with copies of row 0 (always-valid
+cells, reusing the ``active``-mask idiom of never letting filler produce
+NaNs) and the padded rows are stripped on the host side — metrics are
+identical to the unpadded grid (``tests/test_sharding.py``).
+
+**Escape hatch.** ``REPRO_SWEEP_SHARD=0`` in the environment forces the
+single-device (unsharded) path everywhere, whatever the device count — the
+documented debugging switch when a mesh-related failure needs to be
+isolated from the grid math.
+
+**Host-device forcing.** On CPU hosts the multi-device path is exercised by
+forcing XLA to expose fake host devices (``--xla_force_host_platform_
+device_count=N`` — the XLA-flag-dictionary idiom of the serving stacks this
+repo's SNIPPETS reference).  ``host_device_env`` builds a subprocess
+environment with N forced devices (how the scaling benchmark and the
+sharding tests spawn 1/2/4/8-device workers); ``force_host_device_count``
+sets the flag in-process and refuses to run once the backend is already
+initialized, because the flag is read exactly once.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+DATA_AXIS = "data"   # batched sweep axis: fleet | workflow | capacity
+GRID_AXIS = "grid"   # scenario axis
+
+SHARD_ENV = "REPRO_SWEEP_SHARD"
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def shard_env_enabled() -> bool:
+    """False iff ``REPRO_SWEEP_SHARD=0`` (or ``false``/``off``) is set."""
+    return os.environ.get(SHARD_ENV, "").lower() not in ("0", "false", "off")
+
+
+def should_shard(flag: bool | None = None) -> bool:
+    """Resolve one sweep call's sharding decision.
+
+    ``flag=False`` always wins; the ``REPRO_SWEEP_SHARD=0`` escape hatch
+    wins next; otherwise shard exactly when more than one device is live
+    (on a single device the sharded and unsharded programs are the same
+    placement, and routing through the plain jit keeps single-device
+    results bit-identical by construction).
+    """
+    if flag is False:
+        return False
+    if not shard_env_enabled():
+        return False
+    return jax.device_count() > 1
+
+
+def mesh_shape(num_devices: int) -> tuple[int, int]:
+    """Factor ``num_devices`` into (data, grid) mesh dims, near-square with
+    the larger factor on ``grid`` — the scenario axis dominates paper-style
+    grids, so it gets the wider slice of the machine."""
+    n = int(num_devices)
+    if n < 1:
+        raise ValueError(f"need at least one device, got {n}")
+    dd = max(k for k in range(1, math.isqrt(n) + 1) if n % k == 0)
+    return dd, n // dd
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_mesh(dd: int, dg: int) -> Mesh:
+    return jax.make_mesh((dd, dg), (DATA_AXIS, GRID_AXIS))
+
+
+def grid_mesh(num_devices: int | None = None) -> Mesh:
+    """The cached 2D ``("data", "grid")`` sweep mesh over all live devices.
+
+    The mesh is built once per (data, grid) shape and cached for the life
+    of the process — the device topology cannot change after backend
+    initialization, and ``jax.make_mesh`` is too expensive for a per-sweep
+    rebuild.
+    """
+    n = jax.device_count() if num_devices is None else int(num_devices)
+    return _cached_mesh(*mesh_shape(n))
+
+
+def pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    """Pad ``x`` along ``axis`` up to the next multiple of ``multiple`` by
+    repeating the slice at index 0.
+
+    Repeating a *real* row (rather than zeros) keeps every padded cell a
+    well-posed simulation — no degenerate fleets, no NaN risk anywhere in
+    the padded block — mirroring how ``pad_fleet`` keeps padded agent slots
+    inert-but-valid.  Callers strip the rows host-side after the grid runs.
+    """
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(0, 1)
+    filler_shape = x.shape[:axis] + (pad,) + x.shape[axis + 1:]
+    filler = jnp.broadcast_to(x[tuple(idx)], filler_shape)
+    return jnp.concatenate([x, filler], axis=axis)
+
+
+def pad_tree_axis(tree: Any, axis: int, multiple: int) -> Any:
+    """``pad_axis`` over every leaf of a stacked pytree (Fleet / Workflow /
+    CapacityConfig batches — static aux data like names passes through)."""
+    return jax.tree_util.tree_map(lambda x: pad_axis(x, axis, multiple), tree)
+
+
+def grid_specs(batch_axis: str | None) -> tuple[tuple, PartitionSpec]:
+    """(in_specs, out_spec) for one sharded streaming grid call.
+
+    ``in_specs`` covers ``(arrivals, fleet, workflow, capacity)`` — pytree
+    *prefixes*, so one spec serves every leaf of a stacked pytree.  With a
+    batch axis, the batch shards over ``data`` and the scenario axis over
+    ``grid``; the plain ``sweep`` grid has only a scenario axis, which
+    shards over the *flattened* mesh (both axes) so no device idles.
+    ``out_spec`` is the shared prefix for all four kernel outputs, whose
+    layout is ([batch,] policy, scenario, ·).
+    """
+    P = PartitionSpec
+    if batch_axis is None:
+        both = (DATA_AXIS, GRID_AXIS)
+        return (P(both), P(), P(), P()), P(None, both)
+    arrivals = {
+        "fleet": P(DATA_AXIS, GRID_AXIS),   # (F, W, S, N): per-fleet columns
+        "workflow": P(GRID_AXIS),           # (W, S, N): one shared block
+        "capacity": P(GRID_AXIS),
+    }[batch_axis]
+    batched = P(DATA_AXIS)
+    fleet = batched if batch_axis == "fleet" else P()
+    workflow = batched if batch_axis == "workflow" else P()
+    capacity = batched if batch_axis == "capacity" else P()
+    return (arrivals, fleet, workflow, capacity), P(DATA_AXIS, None, GRID_AXIS)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Every-device replication — the old 1D fallback layout, kept only as
+    the benchmark baseline (``benchmarks/scaling_frontier.py`` measures the
+    redundant work it burns)."""
+    return NamedSharding(mesh, PartitionSpec())
+
+
+# -- host-device forcing (CPU multi-device harness) --------------------------
+
+
+def _strip_force_flag(flags: str) -> list[str]:
+    return [f for f in flags.split() if not f.startswith(_FORCE_FLAG)]
+
+
+def host_device_env(
+    num_devices: int, base_env: dict | None = None
+) -> dict[str, str]:
+    """Environment for a subprocess worker seeing ``num_devices`` forced
+    host CPU devices — the one way to measure 1/2/4/8-device scaling on a
+    CPU host, since the flag is consumed at backend initialization and can
+    never change inside a live process."""
+    env = dict(os.environ if base_env is None else base_env)
+    env["JAX_PLATFORMS"] = "cpu"
+    flags = _strip_force_flag(env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = " ".join(
+        flags + [f"{_FORCE_FLAG}={int(num_devices)}"]
+    ).strip()
+    return env
+
+
+def force_host_device_count(num_devices: int) -> None:
+    """Set the forced-host-device flag for *this* process.
+
+    Only effective before jax initializes its backends; once devices exist
+    the flag is dead, so this raises instead of silently doing nothing.
+    """
+    if _backend_initialized():
+        raise RuntimeError(
+            "jax backends are already initialized; "
+            f"{_FORCE_FLAG} must be set before the first device query "
+            "(use host_device_env + a subprocess instead)"
+        )
+    flags = _strip_force_flag(os.environ.get("XLA_FLAGS", ""))
+    os.environ["XLA_FLAGS"] = " ".join(
+        flags + [f"{_FORCE_FLAG}={int(num_devices)}"]
+    ).strip()
+
+
+def _backend_initialized() -> bool:
+    try:
+        from jax._src import xla_bridge
+
+        return bool(xla_bridge._backends)
+    except Exception:  # private API moved: assume live, the safe answer
+        return True

@@ -34,11 +34,20 @@ reductions, and receive/forward no routed traffic (``pad_workflow``), so
 each row of a batched grid matches its unbatched original within float
 tolerance.
 
-The batched fleet grid is **device-sharded**: the fleet axis is laid out
-across ``jax.devices()`` with a 1D mesh + ``NamedSharding`` (the
-``launch/mesh.py`` / ``distributed/sharding.py`` conventions: non-divisible
-axes fall back to replication), producing identical metrics on a single
-device and near-linear scaling on many.
+Every streaming grid is **device-sharded over a 2D mesh** when more than
+one device is live (``core/sharding.py``): the batched sweep axis (fleet |
+workflow | capacity) lays out over the mesh's ``data`` axis and the
+scenario axis — the largest axis in every paper-style grid — over its
+``grid`` axis, via ``shard_map`` with the per-cell streaming scan unchanged
+inside the shard body and the arrivals block donated
+(``donate_argnums``) so large grids stop double-buffering their biggest
+input.  Non-divisible axes are padded with copies of row 0 and stripped on
+the host side (never the old silent whole-axis replication), so sharded
+metrics are identical to unsharded ones; on a single device every entry
+point routes through the plain jit and stays bit-identical to the
+unsharded kernel.  ``REPRO_SWEEP_SHARD=0`` forces that single-device path
+everywhere (the documented debugging escape hatch), and the trace-based
+oracle kernel keeps a ``NamedSharding`` layout hint on the fleet axis.
 
 Per-cell Table II metrics are reduced inside the jit so the host only
 materializes a small (…, P, W, M) grid (plus full traces when
@@ -69,9 +78,12 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import allocator as alloc
+from repro.core import sharding
+from repro.core.sharding import grid_mesh  # re-export: the cached 2D mesh
 from repro.core import routing
 from repro.core import workload
 from repro.core.agents import Fleet, stack_fleets
@@ -362,10 +374,7 @@ def _grid_jit(
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("config", "names", "batch_axis")
-)
-def _stream_grid_jit(
+def _stream_grid(
     arrivals: jnp.ndarray,   # (W, S, N), or (F, W, S, N) when batch_axis="fleet"
     fleet: Fleet,            # leaves (N,), or (F, N) when batch_axis="fleet"
     workflow: Workflow | None,  # leaves (K, N, N)/(K, N) when batch_axis="workflow"
@@ -384,6 +393,11 @@ def _stream_grid_jit(
     O(P · S · N)).  Only the scenario axis — and the optional outer
     fleet/workflow/capacity axis — is vmapped.  ``_grid_jit`` remains the
     trace-materializing parity oracle.
+
+    This function is deliberately unjitted: ``_stream_grid_jit`` wraps it
+    for the single-device path and ``_stream_grid_sharded`` runs the exact
+    same body per device block under ``shard_map`` — one kernel, two
+    placements, no way for the sharded math to drift.
     """
 
     def cell(arr, fl, wf, cp):
@@ -404,6 +418,100 @@ def _stream_grid_jit(
     )
 
 
+_stream_grid_jit = functools.partial(
+    jax.jit, static_argnames=("config", "names", "batch_axis")
+)(_stream_grid)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "config", "names", "batch_axis"),
+    donate_argnums=(0,),
+)
+def _stream_grid_sharded(
+    arrivals: jnp.ndarray,
+    fleet: Fleet,
+    workflow: Workflow | None,
+    capacity: CapacityConfig | None,
+    mesh: jax.sharding.Mesh,
+    config: SimConfig,
+    names: tuple,
+    batch_axis: str | None,
+):
+    """The 2D-sharded streaming grid: ``shard_map`` of ``_stream_grid``
+    over the ``("data", "grid")`` mesh.
+
+    Each device runs the unchanged per-cell streaming scan on its
+    (batch-block × scenario-block) of the grid — cells are independent, so
+    no collectives appear anywhere in the body.  ``arrivals`` (the grid's
+    dominant input, (F, W, S, N) floats) is **donated**: XLA may reuse its
+    buffer for outputs/scratch instead of double-buffering million-cell
+    grids.  Callers must therefore pass a freshly built (or freshly
+    padded) array and never reuse it afterwards — every sweep entry point
+    rebuilds arrivals per call, which is what keeps second calls safe
+    (tests/test_sharding.py).
+
+    Axes must already divide the mesh (``_run_grid`` pads them); specs are
+    built in ``core/sharding.py::grid_specs``.
+    """
+    in_specs, out_spec = sharding.grid_specs(batch_axis)
+    body = functools.partial(
+        _stream_grid, config=config, names=names, batch_axis=batch_axis
+    )
+    return shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
+        check_rep=False,
+    )(arrivals, fleet, workflow, capacity)
+
+
+def _run_stream_sharded(
+    arrivals: jnp.ndarray,
+    fleet: Fleet,
+    workflow: Workflow | None,
+    capacity: CapacityConfig | None,
+    config: SimConfig,
+    names: tuple,
+    batch_axis: str | None,
+):
+    """Pad the sharded axes to mesh divisibility, run the 2D-sharded
+    streaming kernel, strip the padding host-side.
+
+    Padding repeats row 0 (always-valid cells — the ``active``-mask idiom
+    of inert-but-well-posed filler) instead of falling back to whole-axis
+    replication, so a non-divisible axis costs at most ``mesh_dim - 1``
+    wasted rows rather than ``device_count - 1`` redundant copies of the
+    entire grid.  The stripped results are identical to the unpadded grid
+    because cells never interact.
+    """
+    mesh = sharding.grid_mesh()
+    dd = mesh.shape[sharding.DATA_AXIS]
+    dg = mesh.shape[sharding.GRID_AXIS]
+    if batch_axis is None:
+        w = arrivals.shape[0]
+        arrivals = sharding.pad_axis(arrivals, 0, dd * dg)
+        out = _stream_grid_sharded(
+            arrivals, fleet, workflow, capacity, mesh, config, names,
+            batch_axis,
+        )
+        return tuple(x[:, :w] for x in out)
+    if batch_axis == "fleet":
+        b, w = arrivals.shape[:2]
+        arrivals = sharding.pad_axis(sharding.pad_axis(arrivals, 0, dd), 1, dg)
+        fleet = sharding.pad_tree_axis(fleet, 0, dd)
+    elif batch_axis == "workflow":
+        b, w = workflow.route.shape[0], arrivals.shape[0]
+        arrivals = sharding.pad_axis(arrivals, 0, dg)
+        workflow = sharding.pad_tree_axis(workflow, 0, dd)
+    else:
+        b, w = capacity.policy_id.shape[0], arrivals.shape[0]
+        arrivals = sharding.pad_axis(arrivals, 0, dg)
+        capacity = sharding.pad_tree_axis(capacity, 0, dd)
+    out = _stream_grid_sharded(
+        arrivals, fleet, workflow, capacity, mesh, config, names, batch_axis
+    )
+    return tuple(x[:b, :, :w] for x in out)
+
+
 def _run_grid(
     pids: jnp.ndarray,
     arrivals: jnp.ndarray,
@@ -416,8 +524,11 @@ def _run_grid(
     keep_traces: bool,
     stream: bool | None,
     batch_axis: str | None,
+    shard: bool | None = None,
 ):
-    """Pick the kernel for one sweep call: streaming by default, the
+    """Pick the kernel and placement for one sweep call: streaming by
+    default — 2D-sharded over the ``("data", "grid")`` mesh whenever more
+    than one device is live (``sharding.should_shard``) — and the
     trace-based oracle when traces are requested or ``stream=False``.
 
     Returns the kernel's device-array tuple — (metrics, per-lat, per-tput,
@@ -430,9 +541,29 @@ def _run_grid(
             "never materializes traces; use keep_traces=True with "
             "stream=False (or leave stream unset)"
         )
+    sharded = sharding.should_shard(shard)
     if streamed:
+        if sharded:
+            return _run_stream_sharded(
+                arrivals, fleet, workflow, capacity, config, names, batch_axis
+            )
         return _stream_grid_jit(
             arrivals, fleet, workflow, capacity, config, names, batch_axis
+        )
+    if sharded and batch_axis == "fleet":
+        # The parity oracle keeps the pre-shard_map layout-hint path: pad
+        # the fleet axis to device divisibility (never replicate — the old
+        # fallback burned device_count× redundant work), lay it across the
+        # flattened mesh, and strip the padded rows from every output
+        # (traces included) host-side.
+        f = arrivals.shape[0]
+        fleet, arrivals = _shard_fleet_axis(fleet, arrivals)
+        out = _grid_jit(
+            pids, arrivals, fleet, workflow, capacity, config, reg_names,
+            keep_traces, batch_axis,
+        )
+        return tuple(
+            jax.tree_util.tree_map(lambda x: x[:f], o) for o in out
         )
     return _grid_jit(
         pids, arrivals, fleet, workflow, capacity, config, reg_names,
@@ -440,28 +571,24 @@ def _run_grid(
     )
 
 
-def grid_mesh() -> jax.sharding.Mesh:
-    """All live devices as a 1D ``grid`` mesh (cf. ``launch.mesh.make_host_mesh``)."""
-    n = len(jax.devices())
-    return jax.make_mesh((n,), ("grid",))
-
-
 def _shard_fleet_axis(stacked: Fleet, arrivals: jnp.ndarray, mesh=None):
-    """Lay the fleet axis out across the mesh's ``grid`` axis.
+    """Lay the fleet axis of the trace-oracle grid across every device.
 
-    Follows ``distributed/sharding.py``'s divisibility convention: when the
-    fleet count does not divide the device count the axis is replicated
-    instead, so the sharded path always runs (and on one device is the
-    identity placement — metrics are bit-identical to the unsharded path).
+    A ``NamedSharding`` layout *hint* (GSPMD propagates it through the
+    vmapped kernel) over the flattened 2D mesh.  A fleet count that does
+    not divide the device count is **padded** to the next multiple with
+    copies of fleet 0 — the old whole-axis replication fallback silently
+    forfeited all parallelism (6 fleets on 4 devices ran every cell on
+    every device); padded rows cost at most ``device_count - 1`` wasted
+    fleets and are stripped by ``_run_grid``, keeping metrics identical.
     """
-    mesh = grid_mesh() if mesh is None else mesh
-    f = arrivals.shape[0]
-    if f % mesh.shape["grid"] == 0:
-        spec = PartitionSpec("grid")
-    else:
-        spec = PartitionSpec()
-    sharding = NamedSharding(mesh, spec)
-    return jax.device_put(stacked, sharding), jax.device_put(arrivals, sharding)
+    mesh = sharding.grid_mesh() if mesh is None else mesh
+    total = int(np.prod(list(mesh.shape.values())))
+    stacked = sharding.pad_tree_axis(stacked, 0, total)
+    arrivals = sharding.pad_axis(arrivals, 0, total)
+    spec = PartitionSpec((sharding.DATA_AXIS, sharding.GRID_AXIS))
+    layout = NamedSharding(mesh, spec)
+    return jax.device_put(stacked, layout), jax.device_put(arrivals, layout)
 
 
 def sweep(
@@ -473,6 +600,7 @@ def sweep(
     capacity: CapacityConfig | None = None,
     stream: bool | None = None,
     return_arrays: bool = False,
+    shard: bool | None = None,
 ) -> SweepResult | tuple:
     """Evaluate ``policies`` (default: the whole registry) × ``scenarios``.
 
@@ -486,6 +614,10 @@ def sweep(
     per-cell metric either way.  ``return_arrays=True`` skips the host
     transfer and returns the kernel's raw device arrays — the benchmark
     timing surface (``jax.block_until_ready`` them to time device work).
+    On a multi-device host the scenario axis of the streaming grid shards
+    over the full 2D mesh (``core/sharding.py``); ``shard=False`` — or
+    ``REPRO_SWEEP_SHARD=0`` in the environment — forces the single-device
+    path.
     """
     fleet.validate()
     if capacity is not None:
@@ -498,7 +630,7 @@ def sweep(
     )  # (W, S, N)
 
     out = _run_grid(pids, arrivals, fleet, None, capacity, config,
-                       reg_names, names, keep_traces, stream, None)
+                       reg_names, names, keep_traces, stream, None, shard)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -525,7 +657,7 @@ def sweep_fleets(
     policies: Sequence[str] | None = None,
     fleet_names: Sequence[str] | None = None,
     keep_traces: bool = False,
-    shard: bool = True,
+    shard: bool | None = True,
     stream: bool | None = None,
     return_arrays: bool = False,
 ) -> SweepResult | tuple:
@@ -535,13 +667,18 @@ def sweep_fleets(
     ``Fleet`` pytree; each fleet gets a matched scenario column generated at
     its true size from its own rate vector (default:
     ``workload.synthetic_rates`` at the paper's aggregate load, so total
-    demand is held constant while the agent count scales).  ``shard=True``
-    lays the fleet axis across ``jax.devices()`` (identical metrics on one
-    device); the per-fleet rows match the unbatched ``sweep`` within float
-    tolerance.  The streaming kernel (default for ``keep_traces=False``)
-    is what makes the long-horizon end of this grid feasible at all: peak
-    memory per cell is O(N), not O(S · N), so N = 1024 fleets over 10⁴-step
-    horizons fit on a single host.
+    demand is held constant while the agent count scales).  With
+    ``shard=True`` (the default) a multi-device host lays the fleet axis
+    over the 2D mesh's ``data`` axis and the scenario axis over its
+    ``grid`` axis via ``shard_map`` (trace-oracle runs keep a
+    ``NamedSharding`` hint on the fleet axis); non-divisible axes are
+    padded, never replicated, and single-device metrics are bit-identical
+    to the unsharded kernel.  ``shard=False`` or ``REPRO_SWEEP_SHARD=0``
+    forces the single-device path.  The per-fleet rows match the unbatched
+    ``sweep`` within float tolerance.  The streaming kernel (default for
+    ``keep_traces=False``) is what makes the long-horizon end of this grid
+    feasible at all: peak memory per cell is O(N), not O(S · N), so
+    N = 1024 fleets over 10⁴-step horizons fit on a single host.
     """
     fleets = list(fleets)
     if not fleets:
@@ -571,15 +708,13 @@ def sweep_fleets(
     scen_names, arrivals = fleet_scenario_library(
         rate_vectors, stacked.num_agents, num_steps, seed
     )  # (F, W, S, N_max)
-    if shard:
-        stacked, arrivals = _shard_fleet_axis(stacked, arrivals)
 
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
     out = _run_grid(pids, arrivals, stacked, None, None, config,
-                       reg_names, names, keep_traces, stream, "fleet")
+                       reg_names, names, keep_traces, stream, "fleet", shard)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -628,6 +763,7 @@ def sweep_workflows(
     keep_traces: bool = False,
     stream: bool | None = None,
     return_arrays: bool = False,
+    shard: bool | None = None,
 ) -> SweepResult | tuple:
     """One jitted (workflow × policy × scenario) grid over one fleet.
 
@@ -638,7 +774,10 @@ def sweep_workflows(
     workflow's source flags, so a coordinator-star column only injects
     traffic at the coordinator.  Defaults: the canonical topology library
     at the fleet's width, and the standard scenario library over
-    ``workload.synthetic_rates``.
+    ``workload.synthetic_rates``.  On a multi-device host the workflow
+    axis shards over the mesh's ``data`` axis and the scenario axis over
+    ``grid`` (``shard=False`` / ``REPRO_SWEEP_SHARD=0`` force the
+    single-device path).
     """
     fleet.validate()
     n = fleet.num_agents
@@ -667,7 +806,8 @@ def sweep_workflows(
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
     out = _run_grid(pids, arrivals, fleet, stacked_wf, None, config,
-                       reg_names, names, keep_traces, stream, "workflow")
+                       reg_names, names, keep_traces, stream, "workflow",
+                       shard)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -736,6 +876,7 @@ def sweep_capacity(
     keep_traces: bool = False,
     stream: bool | None = None,
     return_arrays: bool = False,
+    shard: bool | None = None,
 ) -> SweepResult | tuple:
     """One jitted (capacity × policy × scenario) grid over one fleet.
 
@@ -747,7 +888,10 @@ def sweep_capacity(
     policies, capacity policies, and scenarios (the paper's cost-efficiency
     comparison, finally non-vacuous).  Defaults: the canonical capacity
     library and the standard scenario library over
-    ``workload.synthetic_rates``.
+    ``workload.synthetic_rates``.  On a multi-device host the capacity
+    axis shards over the mesh's ``data`` axis and the scenario axis over
+    ``grid`` (``shard=False`` / ``REPRO_SWEEP_SHARD=0`` force the
+    single-device path).
     """
     fleet.validate()
     if capacities is None:
@@ -775,7 +919,8 @@ def sweep_capacity(
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
     out = _run_grid(pids, arrivals, fleet, None, stacked_cap, config,
-                       reg_names, names, keep_traces, stream, "capacity")
+                       reg_names, names, keep_traces, stream, "capacity",
+                       shard)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])

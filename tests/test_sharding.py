@@ -1,0 +1,262 @@
+"""2D-mesh sharding invariants — ``core/sharding.py`` + the shard_map path.
+
+Three layers of coverage:
+
+* **Pure unit tests** (any device count): mesh factorization, padding
+  semantics, mesh caching, the ``REPRO_SWEEP_SHARD`` escape hatch, and the
+  backend-initialization guard on ``force_host_device_count``.
+* **In-process multi-device tests** — run when the interpreter already
+  sees >= 2 devices (CI's dedicated step sets ``XLA_FLAGS=--xla_force_
+  host_platform_device_count=8``): (a) the 2D-sharded streaming grid
+  matches the unsharded trace oracle for the FULL policy registry, (b)
+  sharded metrics are **bit-identical** to unsharded for all four sweep
+  entry points — including non-divisible axis sizes, where the padded
+  rows must strip away without a trace (cells are independent and the
+  shard body is the very same ``_stream_grid`` the single-device jit
+  runs, so exact equality is the contract, not a tolerance), (c) arrivals
+  donation does not poison second calls.
+* **Subprocess fallback** (single-device runs): one forced-8-device child
+  re-runs the entry-point grids sharded and the parent compares against
+  its own single-device references.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sharding
+from repro.core.agents import synthetic_fleet
+from repro.core.sweep import (
+    scenario_library,
+    sweep,
+    sweep_capacity,
+    sweep_fleets,
+    sweep_workflows,
+)
+from repro.core.workload import synthetic_rates
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+NUM_STEPS = 12
+POLICIES = ("static_equal", "adaptive", "water_filling")
+# Non-divisible on purpose: 5 fleets never divide a 2- or 8-wide mesh axis.
+ODD_FLEET_SIZES = (2, 3, 4, 5, 3)
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(covered by the subprocess variant on single-device runs)",
+)
+
+
+# -- pure unit layer ---------------------------------------------------------
+
+
+def test_mesh_shape_near_square_grid_major():
+    assert sharding.mesh_shape(1) == (1, 1)
+    assert sharding.mesh_shape(2) == (1, 2)
+    assert sharding.mesh_shape(4) == (2, 2)
+    assert sharding.mesh_shape(6) == (2, 3)
+    assert sharding.mesh_shape(7) == (1, 7)   # prime: all on the grid axis
+    assert sharding.mesh_shape(8) == (2, 4)
+    for n in range(1, 33):
+        dd, dg = sharding.mesh_shape(n)
+        assert dd * dg == n and dd <= dg
+    with pytest.raises(ValueError):
+        sharding.mesh_shape(0)
+
+
+def test_pad_axis_repeats_row_zero_and_noops_when_divisible():
+    x = jnp.arange(12.0).reshape(3, 4)
+    assert sharding.pad_axis(x, 0, 3) is x
+    padded = sharding.pad_axis(x, 0, 4)
+    assert padded.shape == (4, 4)
+    np.testing.assert_array_equal(padded[:3], x)
+    np.testing.assert_array_equal(padded[3], x[0])
+    padded1 = sharding.pad_axis(x, 1, 6)
+    assert padded1.shape == (3, 6)
+    np.testing.assert_array_equal(padded1[:, 4:], np.stack([x[:, 0]] * 2, 1))
+
+
+def test_pad_tree_axis_pads_every_leaf_and_keeps_aux():
+    fleet = synthetic_fleet(3, seed=0)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x, x, x]), fleet
+    )  # (3, N) leaves
+    padded = sharding.pad_tree_axis(stacked, 0, 2)
+    assert padded.priority.shape == (4, 3)
+    np.testing.assert_array_equal(padded.priority[3], stacked.priority[0])
+    assert padded.names == stacked.names  # static aux untouched
+
+
+def test_grid_mesh_is_cached():
+    assert sharding.grid_mesh() is sharding.grid_mesh()
+    dd, dg = sharding.mesh_shape(jax.device_count())
+    assert sharding.grid_mesh().shape == {"data": dd, "grid": dg}
+
+
+def test_should_shard_resolution(monkeypatch):
+    monkeypatch.delenv(sharding.SHARD_ENV, raising=False)
+    assert sharding.should_shard(False) is False  # flag always wins
+    assert sharding.should_shard(None) == (jax.device_count() > 1)
+    assert sharding.should_shard(True) == (jax.device_count() > 1)
+    monkeypatch.setenv(sharding.SHARD_ENV, "0")
+    assert not sharding.shard_env_enabled()
+    assert sharding.should_shard(True) is False   # escape hatch beats flag
+    monkeypatch.setenv(sharding.SHARD_ENV, "1")
+    assert sharding.shard_env_enabled()
+
+
+def test_force_host_device_count_refuses_live_backend():
+    jax.devices()  # ensure the backend is initialized
+    with pytest.raises(RuntimeError, match="already initialized"):
+        sharding.force_host_device_count(8)
+
+
+def test_host_device_env_sets_flag_and_strips_stale_one():
+    env = sharding.host_device_env(4, base_env={"XLA_FLAGS": "--foo=1"})
+    assert "--xla_force_host_platform_device_count=4" in env["XLA_FLAGS"]
+    assert "--foo=1" in env["XLA_FLAGS"]
+    assert env["JAX_PLATFORMS"] == "cpu"
+    again = sharding.host_device_env(2, base_env=env)
+    assert "device_count=4" not in again["XLA_FLAGS"]
+    assert "--xla_force_host_platform_device_count=2" in again["XLA_FLAGS"]
+
+
+# -- grid helpers ------------------------------------------------------------
+
+
+def _fleet_grid(shard, sizes=ODD_FLEET_SIZES, stream=None, policies=POLICIES):
+    fleets = [synthetic_fleet(n, seed=i) for i, n in enumerate(sizes)]
+    return sweep_fleets(
+        fleets, num_steps=NUM_STEPS, seed=0, policies=policies, shard=shard,
+        stream=stream,
+    ).metrics
+
+
+def _entry_grids(shard):
+    """Metrics from all four entry points under one shard setting."""
+    fleet = synthetic_fleet(4, seed=0)
+    scenarios = scenario_library(
+        synthetic_rates(4, seed=0), num_steps=NUM_STEPS
+    )
+    return {
+        "sweep": sweep(fleet, scenarios, policies=POLICIES, shard=shard).metrics,
+        "fleets": _fleet_grid(shard),
+        "workflows": sweep_workflows(
+            fleet, num_steps=NUM_STEPS, policies=POLICIES, shard=shard
+        ).metrics,
+        "capacity": sweep_capacity(
+            fleet, num_steps=NUM_STEPS, policies=POLICIES, shard=shard
+        ).metrics,
+    }
+
+
+# -- in-process multi-device layer -------------------------------------------
+
+
+@multi_device
+def test_sharded_streaming_matches_trace_oracle_full_registry():
+    """(a) The 2D shard_map streaming grid against the unsharded
+    trace-materializing oracle, every registered policy."""
+    streamed = _fleet_grid(shard=True, stream=True, policies=None)
+    oracle = _fleet_grid(shard=False, stream=False, policies=None)
+    np.testing.assert_allclose(streamed, oracle, rtol=1e-3, atol=1e-3)
+
+
+@multi_device
+def test_all_entry_points_sharded_bit_identical_to_unsharded():
+    """(b) Exact equality, all four entry points: the shard body is the
+    same ``_stream_grid`` the single-device jit runs, cells never
+    interact, and padded rows must strip without residue."""
+    sharded, unsharded = _entry_grids(True), _entry_grids(False)
+    for name in sharded:
+        np.testing.assert_array_equal(
+            sharded[name], unsharded[name], err_msg=name
+        )
+
+
+@multi_device
+def test_non_divisible_fleet_axis_padding_is_invisible():
+    """5 fleets on a (2, 4) mesh: both sharded axes need padding; the
+    result must still be bit-identical to the unsharded grid."""
+    assert len(ODD_FLEET_SIZES) % jax.device_count() != 0
+    np.testing.assert_array_equal(
+        _fleet_grid(shard=True), _fleet_grid(shard=False)
+    )
+
+
+@multi_device
+def test_trace_oracle_sharded_fleet_axis_padding_is_invisible():
+    """The trace kernel's padded layout-hint path (``_shard_fleet_axis``)
+    on a non-divisible fleet count — the old silent-replication fallback's
+    replacement — must also strip cleanly."""
+    np.testing.assert_allclose(
+        _fleet_grid(shard=True, stream=False),
+        _fleet_grid(shard=False, stream=False),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@multi_device
+def test_donation_does_not_poison_second_calls():
+    """(c) ``_stream_grid_sharded`` donates its arrivals block; entry
+    points must rebuild it per call, so back-to-back sweeps agree."""
+    first = _entry_grids(True)
+    second = _entry_grids(True)
+    for name in first:
+        np.testing.assert_array_equal(first[name], second[name], err_msg=name)
+
+
+@multi_device
+def test_escape_hatch_forces_unsharded_path(monkeypatch):
+    monkeypatch.setenv(sharding.SHARD_ENV, "0")
+    hatch = _fleet_grid(shard=None)
+    monkeypatch.delenv(sharding.SHARD_ENV)
+    np.testing.assert_array_equal(hatch, _fleet_grid(shard=False))
+
+
+# -- subprocess fallback (single-device hosts) -------------------------------
+
+
+_CHILD = """
+import numpy as np
+import jax
+assert jax.device_count() == 8, jax.devices()
+import tests.test_sharding as t
+grids = t._entry_grids(True)
+odd = t._fleet_grid(shard=True)
+np.savez({out!r}, odd=odd, **grids)
+"""
+
+
+@pytest.mark.skipif(
+    jax.device_count() >= 2,
+    reason="in-process variant already exercises the multi-device path",
+)
+def test_sharded_8_device_subprocess_matches_single_device():
+    references = _entry_grids(False)
+    references["odd"] = _fleet_grid(shard=False)
+    root = os.path.dirname(SRC)
+    env = sharding.host_device_env(8)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [SRC, root, env.get("PYTHONPATH", "")]
+    ).rstrip(os.pathsep)
+    with tempfile.TemporaryDirectory() as tmp:
+        out = os.path.join(tmp, "grids.npz")
+        proc = subprocess.run(
+            [sys.executable, "-c", _CHILD.format(out=out)], env=env,
+            cwd=root, capture_output=True, text=True, timeout=600,
+        )
+        assert proc.returncode == 0, (proc.stdout, proc.stderr)
+        sharded = np.load(out)
+        for name in references:
+            np.testing.assert_allclose(
+                sharded[name], references[name], rtol=1e-5, atol=1e-6,
+                err_msg=name,
+            )
