@@ -42,6 +42,11 @@ from benchmarks import _smoke
 SCHEMA_VERSION = 1
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+RSS_BUDGET_ENV = "REPRO_BENCH_RSS_BUDGET_BYTES"
+# Smoke configurations are liveness-sized; a writer whose smoke run grows
+# past this is holding something horizon- or grid-shaped it shouldn't be.
+SMOKE_RSS_BUDGET_BYTES = 4 * 1024**3
+
 
 def time_device(fn, reps: int) -> float:
     """Mean wall time (us) over ``reps`` calls, after a warmup/compile call.
@@ -142,4 +147,87 @@ def write(name: str, entries: list[dict], out_dir: str | None = None) -> str:
     }
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=1)
+    _check_rss_budget(name)
     return path
+
+
+def rss_budget_bytes() -> int | None:
+    """The peak-RSS budget for this process, or ``None`` (unenforced).
+
+    ``REPRO_BENCH_RSS_BUDGET_BYTES`` pins an explicit budget anywhere; in
+    smoke mode a default budget applies — the memory regression gate for
+    CI's bench-smoke job (a streaming kernel that silently re-materializes
+    its horizon blows straight through it).
+    """
+    env = os.environ.get(RSS_BUDGET_ENV, "")
+    if env:
+        return int(env)
+    return SMOKE_RSS_BUDGET_BYTES if _smoke.smoke() else None
+
+
+def _check_rss_budget(name: str) -> None:
+    """Raise if the process high-water RSS exceeds the budget.
+
+    Runs *after* the BENCH file is written so the measurements survive for
+    diagnosis — the breach fails the run, not the record.
+    """
+    budget = rss_budget_bytes()
+    if budget is None:
+        return
+    rss = max_rss_bytes()
+    if rss > budget:
+        raise RuntimeError(
+            f"BENCH_{name}: peak RSS {rss / 1e9:.2f} GB exceeds the "
+            f"{budget / 1e9:.2f} GB budget ({RSS_BUDGET_ENV} overrides)"
+        )
+
+
+def write_index(out_dir: str | None = None) -> str:
+    """Consolidate the repo-root ``BENCH_*.json`` records into
+    ``BENCH_index.json`` — one line of provenance per benchmark file
+    (mtime, smoke flag, device count, entry count) plus the headline
+    numbers (largest ``wall_us`` entry and best ``us_per_step_per_cell``)
+    so "what do we currently measure, and how fast is it" is one file
+    instead of a directory scan."""
+    root = REPO_ROOT if out_dir is None else out_dir
+    files = sorted(
+        f for f in os.listdir(root)
+        if f.startswith("BENCH_") and f.endswith(".json")
+        and f != "BENCH_index.json"
+    )
+    index = []
+    for fname in files:
+        path = os.path.join(root, fname)
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+        except (OSError, json.JSONDecodeError) as exc:
+            index.append({"file": fname, "error": str(exc)})
+            continue
+        entries = payload.get("entries", [])
+        timed = [e for e in entries if isinstance(e.get("wall_us"), (int, float))]
+        headline = max(timed, key=lambda e: e["wall_us"], default=None)
+        per_cell = [e for e in timed
+                    if isinstance(e.get("us_per_step_per_cell"), (int, float))]
+        best = min(per_cell, key=lambda e: e["us_per_step_per_cell"],
+                   default=None)
+        index.append({
+            "file": fname,
+            "benchmark": payload.get("benchmark"),
+            "date": time.strftime(
+                "%Y-%m-%dT%H:%M:%SZ", time.gmtime(os.path.getmtime(path))
+            ),
+            "smoke": payload.get("smoke"),
+            "device_count": payload.get("device_count"),
+            "num_entries": len(entries),
+            "headline_grid": headline["grid"] if headline else None,
+            "headline_wall_us": headline["wall_us"] if headline else None,
+            "best_us_per_step_per_cell": (
+                best["us_per_step_per_cell"] if best else None
+            ),
+        })
+    out_path = os.path.join(root, "BENCH_index.json")
+    with open(out_path, "w") as fh:
+        json.dump({"schema_version": SCHEMA_VERSION, "files": index}, fh,
+                  indent=1)
+    return out_path

@@ -80,9 +80,13 @@ def run(out_dir: str | None = None) -> list[str]:
     os.makedirs(table_dir, exist_ok=True)
     with open(os.path.join(table_dir, "roofline_table.md"), "w") as fh:
         fh.write(markdown_table(rows) + "\n")
+    # Always write the BENCH file: an empty-rows run emits an explicit
+    # empty record rather than silently leaving a stale (or absent) file —
+    # downstream diffing ("did the roofline disappear?") needs the
+    # distinction between "not run" and "run, no artifacts".
+    _bench.write("roofline", bench_entries(rows), out_dir=out_dir)
     if not rows:
         return ["roofline/table,0,rows=0 (run repro.launch.roofline first)"]
-    _bench.write("roofline", bench_entries(rows), out_dir=out_dir)
     worst = min(rows, key=lambda d: d["useful_flops_ratio"])
     bn = {}
     for d in rows:

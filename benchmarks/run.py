@@ -4,6 +4,11 @@ Prints ``name,us_per_call,derived`` CSV lines (us=0 where the benchmark is
 a metric table rather than a timing).  ``--smoke`` (or
 ``REPRO_BENCH_SMOKE=1``) runs every module in its reduced configuration —
 the CI liveness job that keeps new benchmarks from silently rotting.
+
+``--index`` consolidates the repo-root ``BENCH_*.json`` trajectory records
+into ``BENCH_index.json`` (name, date, headline wall/cell numbers) and
+exits — the cheap "what do we measure and how fast is it" summary CI
+regenerates on every bench-smoke run.
 """
 from __future__ import annotations
 
@@ -14,6 +19,12 @@ import traceback
 # --smoke must be in the environment before the modules read it.
 if "--smoke" in sys.argv[1:]:
     os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+if "--index" in sys.argv[1:]:
+    from benchmarks import _bench
+
+    print(_bench.write_index())
+    sys.exit(0)
 
 from benchmarks import (
     allocator_scaling,

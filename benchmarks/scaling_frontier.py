@@ -20,6 +20,24 @@ reports its timings back over stdout.  Four grid families:
   alongside at 10⁴ fleets; plus a 10⁵-step scenario-axis horizon grid
   through the plain ``sweep`` entry point (horizon-independent memory is
   what makes it feasible at all).
+* ``horizon_synth`` / ``horizon_mat`` — the in-scan-synthesis payoff pair
+  at S = 10⁶ steps: the full scenario registry as ``WorkloadSpec`` columns
+  synthesized inside the scan (O(W·N) input memory) versus the same specs
+  materialized to a (W, S, N) tensor first (the materialization runs
+  inside the timed region — it is exactly the producer cost synthesis
+  eliminates).  The synth arm runs *first* so its ``max_rss_bytes`` is
+  attributable.
+* ``widefleet`` — the honest memory frontier: a fleet wide enough that the
+  materialized S = 10⁶ arrivals tensor exceeds physical host RAM.  The
+  materialized arm is **refused** (an entry with ``status`` and
+  ``required_bytes`` > ``available_bytes`` — no timing, the allocation
+  cannot exist), while the synthesis arm is measured at the same width
+  over a shorter *probe* horizon (its memory is O(1) in S, so only wall
+  time — ~14 ms/step/80k-lanes on this host — caps the probe).
+* ``policy_axis`` — strong scaling over the third mesh axis at the top
+  device count: a deliberately narrow scenario axis (W=2) that starves
+  the 2D layout, re-run with dp ∈ divisors so the (P, N) policy-stack
+  rows split across the ``policy`` axis instead.
 
 Timed regions contain kernel work only (fleet/scenario construction is
 hoisted, as in ``fleet_scaling.py``), block on device output via
@@ -53,6 +71,13 @@ SCENARIO_MAJOR_FLEETS = 2      # deliberately never divides the device count
 FRONTIER_FLEETS = 10_000
 MILLION_CELL_FLEETS = 18_000   # 18_000 · 7 policies · 8 scenarios > 10⁶ cells
 HORIZON_STEPS = 100_000
+HORIZON_FRONTIER_STEPS = 1_000_000
+WIDE_AGENTS = 40_960           # (1, 10⁶, 40960) f32 = 164 GB: exceeds host RAM
+WIDE_STEPS = 1_000_000
+WIDE_PROBE_STEPS = 20_000      # synth probe horizon: memory is O(1) in S,
+                               # only the ~14 ms/step wall caps the probe
+POLICY_AXIS_STEPS = 1_000
+POLICY_AXIS_SCENARIOS = 2      # narrow scenario axis: starves the 2D layout
 NUM_STEPS = 200
 FRONTIER_STEPS = 50
 AGENTS = 8
@@ -61,13 +86,39 @@ REPS = 3
 WORKER_TIMEOUT_S = 3600
 
 
+def _policy_axis_widths(device_count: int) -> tuple[int, ...]:
+    return tuple(k for k in (1, 2, 4, 8) if device_count % k == 0
+                 and k <= device_count)
+
+
 def _tasks(device_count: int, max_devices: int, smoke: bool) -> list[dict]:
     """The grid family list one worker process runs."""
     steps = 20 if smoke else NUM_STEPS
     reps = 1 if smoke else REPS
     strong_f = 8 if smoke else STRONG_FLEETS
     weak_f = (4 if smoke else WEAK_FLEETS_PER_DEVICE) * device_count
-    tasks = [
+    tasks = []
+    if device_count == 1:
+        # Memory-frontier grids are a per-host story: single device, and
+        # first in the worker so each arm's max_rss high-water mark is
+        # attributable (synth before materialized, both before anything
+        # bigger).
+        h_steps = 1_000 if smoke else HORIZON_FRONTIER_STEPS
+        tasks.append(dict(grid="horizon_synth_1e6", mode="synth_horizon",
+                          fleets=1, agents=FRONTIER_AGENTS,
+                          num_steps=h_steps, reps=1))
+        tasks.append(dict(grid="horizon_mat_1e6", mode="mat_horizon",
+                          fleets=1, agents=FRONTIER_AGENTS,
+                          num_steps=h_steps, reps=1))
+        wide_n = 2_048 if smoke else WIDE_AGENTS
+        tasks.append(dict(grid="widefleet_synth_probe", mode="synth_wide",
+                          fleets=1, agents=wide_n,
+                          num_steps=50 if smoke else WIDE_PROBE_STEPS,
+                          reps=1))
+        tasks.append(dict(grid="widefleet_mat_1e6", mode="refusal_mat",
+                          fleets=1, agents=WIDE_AGENTS,
+                          num_steps=WIDE_STEPS, reps=0))
+    tasks += [
         dict(grid="strong", mode="default", fleets=strong_f, agents=AGENTS,
              num_steps=steps, reps=reps),
         dict(grid="weak", mode="default", fleets=weak_f, agents=AGENTS,
@@ -80,6 +131,11 @@ def _tasks(device_count: int, max_devices: int, smoke: bool) -> list[dict]:
         tasks.append(dict(grid="scenario_major", mode="replicated_1d",
                           fleets=sm_f, agents=AGENTS, num_steps=steps,
                           reps=reps))
+        for dp in _policy_axis_widths(device_count):
+            tasks.append(dict(grid="policy_axis", mode="policy_axis",
+                              fleets=1, agents=AGENTS,
+                              num_steps=50 if smoke else POLICY_AXIS_STEPS,
+                              reps=reps, policy_devices=dp))
         if not smoke:
             tasks.append(dict(grid="frontier_10k", mode="default",
                               fleets=FRONTIER_FLEETS, agents=FRONTIER_AGENTS,
@@ -125,7 +181,105 @@ def _worker(cfg: dict) -> dict:
     for task in cfg["tasks"]:
         f, n = task["fleets"], task["agents"]
         steps, reps = task["num_steps"], task["reps"]
+        if task["mode"] == "refusal_mat":
+            # The materialized arrivals tensor for this configuration cannot
+            # exist on this host: record the refusal with the arithmetic
+            # instead of OOM-killing the worker.  Even a single scenario
+            # column ((1, S, N) float32 — same W=1 shape the synthesis arm
+            # runs as ``widefleet_synth_probe``) exceeds physical RAM.
+            required = steps * n * 4
+            available = os.sysconf("SC_PHYS_PAGES") * os.sysconf("SC_PAGE_SIZE")
+            entries.append({
+                "grid": task["grid"], "kernel": "streaming_materialized",
+                "n": n, "num_steps": steps, "cells": 1,
+                "wall_us": None, "us_per_step": None,
+                "us_per_step_per_cell": None, "peak_device_bytes": None,
+                "status": "refused: materialized arrivals tensor exceeds host RAM",
+                "required_bytes": required, "available_bytes": int(available),
+                "device_count": cfg["device_count"],
+                "host_cpus": os.cpu_count(),
+            })
+            continue
         fleet = synthetic_fleet(n, seed=0)
+        if task["mode"] in ("synth_horizon", "mat_horizon"):
+            # The S=10⁶ payoff pair: same full scenario registry, one arm
+            # synthesizing rows inside the scan, the other materializing
+            # the (W, S, N) tensor inside the timed region — the producer
+            # cost synthesis eliminates.
+            specs = workload.scenario_specs(
+                workload.synthetic_rates(n, seed=0), num_steps=steps, seed=0
+            )
+            cells = f * len(names) * len(specs)
+            if task["mode"] == "synth_horizon":
+                stack = workload.stack_specs(specs)
+                fn = lambda: sweep_mod._stream_grid_jit(
+                    None, fleet, None, None, stack, config, names, None
+                )
+            else:
+                fn = lambda: sweep_mod._stream_grid_jit(
+                    jnp.stack([workload.materialize(s) for s in specs]),
+                    fleet, None, None, None, config, names, None,
+                )
+            wall_us = _bench.time_device(fn, reps)
+            entries.append(_bench.timing_entry(
+                task["grid"],
+                "streaming_synth" if task["mode"] == "synth_horizon"
+                else "streaming_materialized",
+                n, steps, cells, wall_us,
+                device_count=cfg["device_count"], host_cpus=os.cpu_count(),
+                fleets=f, max_rss_bytes=_bench.max_rss_bytes(),
+                arrivals_bytes_if_materialized=len(specs) * steps * n * 4,
+            ))
+            continue
+        if task["mode"] == "synth_wide":
+            # Synthesis at the refused width: a single cheap time-varying
+            # generator (diurnal — no per-step RNG) over one policy, probe
+            # horizon (memory is O(1) in S; see module docstring).
+            spec = workload.diurnal_spec(
+                workload.synthetic_rates(n, seed=0), num_steps=steps
+            )
+            stack = workload.stack_specs([spec])
+            sub = names[:1]
+            cells = f * len(sub)
+            fn = lambda: sweep_mod._stream_grid_jit(
+                None, fleet, None, None, stack, config, sub, None
+            )
+            wall_us = _bench.time_device(fn, task["reps"])
+            entries.append(_bench.timing_entry(
+                task["grid"], "streaming_synth", n, steps, cells, wall_us,
+                device_count=cfg["device_count"], host_cpus=os.cpu_count(),
+                fleets=f, max_rss_bytes=_bench.max_rss_bytes(),
+                probe_of_num_steps=WIDE_STEPS,
+                arrivals_bytes_if_materialized=steps * n * 4,
+            ))
+            continue
+        if task["mode"] == "policy_axis":
+            # dp-way policy-axis split on a scenario axis too narrow for
+            # the 2D layout (W=2): the (P, N) policy rows shard over the
+            # mesh's third axis, names padded to divisibility inside
+            # ``_run_stream_sharded``.
+            dp = task["policy_devices"]
+            specs = workload.scenario_specs(
+                workload.synthetic_rates(n, seed=0), num_steps=steps, seed=0
+            )[:POLICY_AXIS_SCENARIOS]
+            stack = workload.stack_specs(specs)
+            cells = f * len(names) * len(specs)
+            if cfg["device_count"] > 1:
+                fn = lambda: sweep_mod._run_stream_sharded(
+                    None, fleet, None, None, config, names, None,
+                    wspec=stack, policy_devices=dp,
+                )
+            else:
+                fn = lambda: sweep_mod._stream_grid_jit(
+                    None, fleet, None, None, stack, config, names, None
+                )
+            wall_us = _bench.time_device(fn, reps)
+            entries.append(_bench.timing_entry(
+                task["grid"], f"streaming_3d_dp{dp}", n, steps, cells,
+                wall_us, device_count=cfg["device_count"],
+                host_cpus=os.cpu_count(), fleets=f, policy_devices=dp,
+            ))
+            continue
         scenarios = scenario_library(
             workload.synthetic_rates(n, seed=0), num_steps=steps, seed=0
         )
@@ -157,7 +311,8 @@ def _worker(cfg: dict) -> dict:
                 arrivals_r = jax.device_put(arrivals, layout)
                 stacked_r = jax.device_put(stacked, layout)
                 fn = lambda: sweep_mod._stream_grid_jit(
-                    arrivals_r, stacked_r, None, None, config, names, "fleet"
+                    arrivals_r, stacked_r, None, None, None, config, names,
+                    "fleet",
                 )
             elif jax.device_count() > 1:
                 # The donated arrivals buffer is consumed per call; the
@@ -169,7 +324,8 @@ def _worker(cfg: dict) -> dict:
                 )
             else:
                 fn = lambda: sweep_mod._stream_grid_jit(
-                    arrivals, stacked, None, None, config, names, "fleet"
+                    arrivals, stacked, None, None, None, config, names,
+                    "fleet",
                 )
         wall_us = _bench.time_device(fn, reps)
         kernel = {
@@ -272,6 +428,43 @@ def run(out_dir: str | None = None) -> list[str]:
             f"scaling_frontier/frontier_10k_1d,{rep:.1f},"
             f"slowdown_vs_2d={rep / f10k:.2f}x"
         )
+    synth = next((e for e in entries if e["kernel"] == "streaming_synth"
+                  and e["grid"].startswith("horizon_synth")), None)
+    mat = next((e for e in entries if e["kernel"] == "streaming_materialized"
+                and e["grid"].startswith("horizon_mat")), None)
+    if synth and mat:
+        out.append(
+            f"scaling_frontier/horizon_synth,{synth['wall_us']:.1f},"
+            f"S={synth['num_steps']};rss={synth.get('max_rss_bytes')}"
+        )
+        out.append(
+            f"scaling_frontier/horizon_mat,{mat['wall_us']:.1f},"
+            f"wall_vs_synth={mat['wall_us'] / synth['wall_us']:.2f}x;"
+            f"rss={mat.get('max_rss_bytes')}"
+        )
+    refusal = next((e for e in entries if e.get("status")), None)
+    if refusal:
+        out.append(
+            f"scaling_frontier/widefleet_mat,0,"
+            f"refused_required_gb={refusal['required_bytes'] / 1e9:.0f};"
+            f"available_gb={refusal['available_bytes'] / 1e9:.0f}"
+        )
+    probe = next((e for e in entries
+                  if e["grid"] == "widefleet_synth_probe"), None)
+    if probe:
+        out.append(
+            f"scaling_frontier/widefleet_synth_probe,{probe['wall_us']:.1f},"
+            f"n={probe['n']};us_per_step={probe['us_per_step']:.1f}"
+        )
+    pol = sorted((e for e in entries if e["grid"] == "policy_axis"),
+                 key=lambda e: e["policy_devices"])
+    if pol:
+        base = pol[0]["wall_us"]
+        for e in pol:
+            out.append(
+                f"scaling_frontier/policy_axis_dp{e['policy_devices']},"
+                f"{e['wall_us']:.1f},speedup_vs_dp1={base / e['wall_us']:.2f}x"
+            )
     return out
 
 

@@ -147,9 +147,33 @@ def water_filling(
     return jnp.where(total > 0, g, jnp.zeros_like(g))
 
 
+def _committed(x: jnp.ndarray) -> jnp.ndarray:
+    """Pin ``x`` to its rounded float32 value against FMA contraction.
+
+    XLA CPU freely contracts ``a·b + c`` into a fused multiply-add (one
+    rounding) or not (two roundings) depending on how the surrounding
+    program vectorizes — so the *same* expression can differ by 1 ulp
+    between two compilations (e.g. the in-scan-synthesis and materialized
+    arms of the streaming kernel, which promise bit-identical metrics).
+    ``lax.optimization_barrier`` does not help: it is erased before LLVM
+    codegen, where the contraction happens.  A select on a data-dependent
+    predicate does — ``x == x`` is only false for NaN, which no simplifier
+    can prove away, and a select between the multiply and the add breaks
+    the contraction pattern while preserving values exactly (NaN stays
+    NaN via the on-false branch).
+    """
+    return jnp.where(x == x, x, jnp.full_like(x, jnp.nan))
+
+
 def ema_forecast(lam_prev_ema: jnp.ndarray, lam_obs: jnp.ndarray, alpha: float = 0.3) -> jnp.ndarray:
-    """One EMA update; the predictive policy's workload model."""
-    return alpha * lam_obs + (1.0 - alpha) * lam_prev_ema
+    """One EMA update; the predictive policy's workload model.
+
+    Both products are committed to rounded f32 before the add so the
+    update has fixed two-rounding semantics in every compilation — the
+    EMA is the one recurrence whose 1-ulp contraction drift was observed
+    to break the synthesized-vs-materialized bit-identity contract.
+    """
+    return _committed(alpha * lam_obs) + _committed((1.0 - alpha) * lam_prev_ema)
 
 
 def predictive_adaptive(
@@ -363,6 +387,47 @@ def policy_stack(
         budget = g_total[i] if per_row_budget else g_total
         rows.append(fn(t, lam_obs[i], lam_ema[i], queue[i], fleet, budget))
     return jnp.stack(rows)
+
+
+def policy_stack_blocks(
+    t: jnp.ndarray,
+    lam_obs: jnp.ndarray,
+    lam_ema: jnp.ndarray,
+    queue: jnp.ndarray,
+    fleet: "Fleet",
+    g_total,
+    names: Sequence[str],
+    num_blocks: int,
+    block_index: jnp.ndarray,
+) -> jnp.ndarray:
+    """``policy_stack`` for ONE contiguous block of the name list, selected
+    by a *traced* index — the policy-axis-sharded dispatch.
+
+    Under ``shard_map`` every device traces the same program, so the static
+    name unrolling of ``policy_stack`` cannot differ per device; what can is
+    a ``lax.switch`` on ``lax.axis_index("policy")``.  Branch k statically
+    unrolls name block k (policies ``names[k*p : (k+1)*p]``), so each device
+    still evaluates each of its P/num_blocks policies exactly once per step
+    — the O(P) dispatch guarantee survives the mesh split, and total trace
+    cost across branches stays O(P).
+
+    The state rows (``lam_obs``/``lam_ema``/``queue``, and ``g_total`` when
+    per-row) are the **block-local** (P/num_blocks, N) rows, not the full
+    stack — the caller already holds only its shard.
+    """
+    names = tuple(names)
+    if num_blocks <= 0 or len(names) % num_blocks:
+        raise ValueError(
+            f"{len(names)} policies do not split into {num_blocks} equal blocks"
+        )
+    size = len(names) // num_blocks
+    branches = tuple(
+        (lambda group=names[k * size:(k + 1) * size]: policy_stack(
+            t, lam_obs, lam_ema, queue, fleet, g_total, group
+        ))
+        for k in range(num_blocks)
+    )
+    return jax.lax.switch(block_index, branches)
 
 
 # Every entry gates its inputs with ``fleet.active`` and hard-masks its

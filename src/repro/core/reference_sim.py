@@ -32,6 +32,29 @@ from repro.core.routing import Workflow
 
 _EPS = 1e-9
 
+
+def synthesize_loop(spec, num_steps: int | None = None) -> np.ndarray:
+    """Eager python-loop twin of ``workload.materialize``.
+
+    Walks the registered generator one step at a time — ``workload_step``
+    called eagerly per t, state threaded through a plain python variable —
+    so the ``lax.scan`` in ``materialize`` (and therefore the in-scan
+    synthesis arm of the streaming kernel, which runs the *same* step
+    functions) is cross-validated by a second control-flow path, exactly
+    like this module's queue-dynamics loop cross-validates the simulator
+    scan.  Returns the (S, N) arrival tensor as float64 rows.
+    """
+    from repro.core import workload as workload_mod
+
+    steps = int(spec.num_steps if num_steps is None else num_steps)
+    state = workload_mod.workload_init(spec)
+    rows = []
+    for t in range(steps):
+        lam, state = workload_mod.workload_step(spec, state, t)
+        rows.append(np.asarray(lam, np.float64))
+    return np.stack(rows)
+
+
 # Every registry entry the oracle reproduces; kept in sync with
 # ``allocator.policy_names()`` by tests/test_reference_sim.py.
 SUPPORTED_POLICIES = (

@@ -1,4 +1,4 @@
-"""2D device-mesh layer for the sweep grids — mesh, padding, placement.
+"""Device-mesh layer for the sweep grids — mesh, padding, placement.
 
 The sweep evaluation surface is a (batch × policy × scenario) grid of
 *independent* cells, which makes it embarrassingly shardable: this module
@@ -6,16 +6,25 @@ owns how that grid is laid out across devices so ``core/sweep.py`` can stay
 about orchestration.
 
 **Mesh.** ``grid_mesh()`` builds (and caches — one ``jax.make_mesh`` per
-process, not per sweep call) a 2D mesh over all live devices with axes
+process shape, not per sweep call) a 3D mesh over all live devices with axes
 
-    ("data", "grid")
+    ("data", "grid", "policy")
 
-where ``data`` carries the batched sweep axis (fleet | workflow | capacity)
-and ``grid`` carries the scenario axis — the largest axis in every
-paper-style grid, which the previous 1D layout left fully replicated on
-every device.  The device count is factored near-square with the larger
-factor on ``grid`` (8 devices → 2 × 4), so scenario-major grids parallelize
-even when the batch axis is tiny.
+where ``data`` carries the batched sweep axis (fleet | workflow | capacity),
+``grid`` carries the scenario axis — the largest axis in every paper-style
+grid, which the previous 1D layout left fully replicated on every device —
+and ``policy`` optionally splits the allocation-policy stack.  By default
+the policy axis is a singleton (dp=1): arrays never shard over a size-1
+axis, so every pre-3D program is bit-identical to the old 2D layout.
+Callers opt in with ``shard="3d"`` (near-cubic ``mesh_shape_3d`` factoring:
+8 devices → 2×2×2), ``REPRO_SWEEP_POLICY_DEVICES=<dp>`` (explicit width),
+or ``REPRO_SWEEP_MESH3D=1`` (global switch).  With dp>1 the streaming
+kernel dispatches each device's policy *block* via one ``lax.switch`` on
+``jax.lax.axis_index("policy")``; the non-divisible policy count pads with
+repeats of policy row 0 (name-tuple padding — stripped host-side like every
+other padded axis).  The remaining ``num_devices/dp`` factor splits
+near-square with the larger factor on ``grid`` (8 devices, dp=1 → 2 × 4),
+so scenario-major grids parallelize even when the batch axis is tiny.
 
 **Divisibility.** A sharded axis must divide its mesh axis.  Instead of the
 old silent whole-axis replication fallback (which forfeits *all*
@@ -50,10 +59,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-DATA_AXIS = "data"   # batched sweep axis: fleet | workflow | capacity
-GRID_AXIS = "grid"   # scenario axis
+DATA_AXIS = "data"     # batched sweep axis: fleet | workflow | capacity
+GRID_AXIS = "grid"     # scenario axis
+POLICY_AXIS = "policy"  # allocation-policy axis (the (P, N) state stack rows)
 
 SHARD_ENV = "REPRO_SWEEP_SHARD"
+MESH3D_ENV = "REPRO_SWEEP_MESH3D"          # "1": auto near-cubic policy axis
+POLICY_ENV = "REPRO_SWEEP_POLICY_DEVICES"  # explicit dp override
 _FORCE_FLAG = "--xla_force_host_platform_device_count"
 
 
@@ -89,21 +101,74 @@ def mesh_shape(num_devices: int) -> tuple[int, int]:
     return dd, n // dd
 
 
+def mesh_shape_3d(num_devices: int) -> tuple[int, int, int]:
+    """Factor ``num_devices`` into (data, grid, policy) mesh dims,
+    near-cubic: the policy axis takes the largest divisor whose cube fits
+    (8 → 2×2×2, 64 → 4×4×4), the remainder splits near-square with the
+    larger factor on ``grid`` exactly as in the 2D layout.  Primes land
+    entirely on ``grid`` (7 → 1×7×1) — the policy axis degrades to
+    unsharded rather than starving the scenario axis."""
+    n = int(num_devices)
+    if n < 1:
+        raise ValueError(f"need at least one device, got {n}")
+    dp = max(k for k in range(1, n + 1) if n % k == 0 and k ** 3 <= n)
+    dd, dg = mesh_shape(n // dp)
+    return dd, dg, dp
+
+
 @functools.lru_cache(maxsize=None)
-def _cached_mesh(dd: int, dg: int) -> Mesh:
-    return jax.make_mesh((dd, dg), (DATA_AXIS, GRID_AXIS))
+def _cached_mesh(dd: int, dg: int, dp: int) -> Mesh:
+    return jax.make_mesh((dd, dg, dp), (DATA_AXIS, GRID_AXIS, POLICY_AXIS))
 
 
-def grid_mesh(num_devices: int | None = None) -> Mesh:
-    """The cached 2D ``("data", "grid")`` sweep mesh over all live devices.
+def grid_mesh(
+    num_devices: int | None = None, policy_devices: int = 1
+) -> Mesh:
+    """The cached ``("data", "grid", "policy")`` sweep mesh over all live
+    devices.
 
-    The mesh is built once per (data, grid) shape and cached for the life
+    ``policy_devices`` (dp) is the policy-axis width; the remaining
+    ``num_devices / dp`` factor splits near-square over (data, grid) as
+    before.  The default ``dp=1`` is the 2D layout with a singleton third
+    axis — arrays never shard over a size-1 axis, so every pre-3D program
+    is unchanged.  The mesh is built once per shape and cached for the life
     of the process — the device topology cannot change after backend
     initialization, and ``jax.make_mesh`` is too expensive for a per-sweep
     rebuild.
     """
     n = jax.device_count() if num_devices is None else int(num_devices)
-    return _cached_mesh(*mesh_shape(n))
+    dp = int(policy_devices)
+    if dp < 1 or n % dp:
+        raise ValueError(
+            f"policy_devices={dp} must divide the device count {n}"
+        )
+    dd, dg = mesh_shape(n // dp)
+    return _cached_mesh(dd, dg, dp)
+
+
+def policy_mesh_devices(flag=None) -> int:
+    """Resolve one sweep call's policy-axis device count (dp).
+
+    ``dp=1`` — the 2D layout — unless the caller opts in: ``shard="3d"``
+    requests the near-cubic ``mesh_shape_3d`` factoring, the
+    ``REPRO_SWEEP_POLICY_DEVICES`` env var pins an explicit dp, and
+    ``REPRO_SWEEP_MESH3D=1`` turns the near-cubic factoring on globally.
+    Whenever sharding itself is off (``should_shard``), dp is 1.
+    """
+    if not should_shard(flag):
+        return 1
+    n = jax.device_count()
+    env_dp = os.environ.get(POLICY_ENV, "")
+    if env_dp:
+        dp = int(env_dp)
+        if dp < 1 or n % dp:
+            raise ValueError(
+                f"{POLICY_ENV}={dp} must divide the device count {n}"
+            )
+        return dp
+    if flag == "3d" or os.environ.get(MESH3D_ENV, "").lower() in ("1", "true", "on"):
+        return mesh_shape_3d(n)[2]
+    return 1
 
 
 def pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
@@ -131,21 +196,31 @@ def pad_tree_axis(tree: Any, axis: int, multiple: int) -> Any:
     return jax.tree_util.tree_map(lambda x: pad_axis(x, axis, multiple), tree)
 
 
-def grid_specs(batch_axis: str | None) -> tuple[tuple, PartitionSpec]:
+def grid_specs(
+    batch_axis: str | None, policy: bool = False
+) -> tuple[tuple, PartitionSpec]:
     """(in_specs, out_spec) for one sharded streaming grid call.
 
-    ``in_specs`` covers ``(arrivals, fleet, workflow, capacity)`` — pytree
-    *prefixes*, so one spec serves every leaf of a stacked pytree.  With a
+    ``in_specs`` covers ``(arrivals, fleet, workflow, capacity, wspec)`` —
+    pytree *prefixes*, so one spec serves every leaf of a stacked pytree.
+    ``wspec`` (a stacked ``WorkloadSpec``, the in-scan synthesis twin of the
+    arrivals tensor) always shards exactly like arrivals: its leaves carry
+    the same leading scenario/batch axes, just without the (S,) horizon
+    axis, which the arrivals prefix specs never constrain anyway.  With a
     batch axis, the batch shards over ``data`` and the scenario axis over
     ``grid``; the plain ``sweep`` grid has only a scenario axis, which
-    shards over the *flattened* mesh (both axes) so no device idles.
+    shards over the *flattened* (data × grid) plane so no device idles.
     ``out_spec`` is the shared prefix for all four kernel outputs, whose
-    layout is ([batch,] policy, scenario, ·).
+    layout is ([batch,] policy, scenario, ·); with ``policy=True`` the
+    policy dim additionally shards over the third mesh axis (the kernel
+    computes only its own block of policy rows per device — inputs stay
+    replicated along ``policy``, each block reads the same state).
     """
     P = PartitionSpec
+    pol = POLICY_AXIS if policy else None
     if batch_axis is None:
         both = (DATA_AXIS, GRID_AXIS)
-        return (P(both), P(), P(), P()), P(None, both)
+        return (P(both), P(), P(), P(), P(both)), P(pol, both)
     arrivals = {
         "fleet": P(DATA_AXIS, GRID_AXIS),   # (F, W, S, N): per-fleet columns
         "workflow": P(GRID_AXIS),           # (W, S, N): one shared block
@@ -155,7 +230,10 @@ def grid_specs(batch_axis: str | None) -> tuple[tuple, PartitionSpec]:
     fleet = batched if batch_axis == "fleet" else P()
     workflow = batched if batch_axis == "workflow" else P()
     capacity = batched if batch_axis == "capacity" else P()
-    return (arrivals, fleet, workflow, capacity), P(DATA_AXIS, None, GRID_AXIS)
+    return (
+        (arrivals, fleet, workflow, capacity, arrivals),
+        P(DATA_AXIS, pol, GRID_AXIS),
+    )
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

@@ -205,17 +205,30 @@ class SimSummary:
         )
 
 
-def _routing_terms(workflow: Workflow | None, fleet: Fleet, arrivals: jnp.ndarray):
+def _routing_terms(
+    workflow: Workflow | None, fleet: Fleet, arrivals: jnp.ndarray | None
+):
     """Shared scan prep: gate exogenous arrivals, precompute routing terms.
 
     With ``workflow=None`` the routing terms are ``None`` — the scan body's
     signal to skip the endogenous path entirely (see ``_queue_step``).
+
+    Returns ``(route_eff, exit_frac, gated_arrivals, gate)``: the 0/1
+    ``gate`` mask (active, source-restricted under a workflow) is what the
+    streaming scan applies per step when arrivals are *synthesized* in the
+    body instead of materialized up front (``arrivals=None``).  Gating by
+    the fused mask is bit-identical to the old two-multiply chain: 0/1
+    masks multiply exactly in any association order.
     """
     if workflow is None:
-        return None, None, arrivals * fleet.active
-    route_eff = workflow.route * workflow.fan_out[..., :, None]  # forwarded copies
-    exit_frac = jnp.maximum(1.0 - workflow.route.sum(axis=-1), 0.0)
-    return route_eff, exit_frac, arrivals * fleet.active * workflow.source
+        gate = fleet.active
+        route_eff = exit_frac = None
+    else:
+        route_eff = workflow.route * workflow.fan_out[..., :, None]  # forwarded copies
+        exit_frac = jnp.maximum(1.0 - workflow.route.sum(axis=-1), 0.0)
+        gate = fleet.active * workflow.source
+    gated = None if arrivals is None else arrivals * gate
+    return route_eff, exit_frac, gated, gate
 
 
 def _queue_step(
@@ -289,7 +302,7 @@ def simulate_core(
     """
     names = alloc.policy_names() if policy_names is None else tuple(policy_names)
     n = fleet.num_agents
-    route_eff, exit_frac, arrivals = _routing_terms(workflow, fleet, arrivals)
+    route_eff, exit_frac, arrivals, _ = _routing_terms(workflow, fleet, arrivals)
     elastic = capacity is not None
 
     def step(carry, inp):
@@ -367,12 +380,15 @@ def simulate(
 
 
 def simulate_stream_core(
-    arrivals: jnp.ndarray,
+    arrivals: jnp.ndarray | None,
     fleet: Fleet,
     config: SimConfig,
     policy_names: Sequence[str] | None = None,
     workflow: Workflow | None = None,
     capacity: CapacityConfig | None = None,
+    workload_spec=None,
+    num_policy_blocks: int = 1,
+    policy_block: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused streaming scan: every named policy's trajectory AND its metric
     reductions in ONE pass, materializing no per-step traces.
@@ -391,6 +407,22 @@ def simulate_stream_core(
       (S, ·) is ever materialized, so peak memory per cell is O(P · N)
       however long the horizon.
 
+    **In-scan synthesis** closes the input side too: pass a
+    ``workload.WorkloadSpec`` (and ``arrivals=None``) and step t's arrival
+    row is computed *inside* the scan body from the O(N) parameter row —
+    ``workload_step`` with a ``fold_in(key, t)`` counter-based draw, MMPP
+    state riding the carry — so nothing of shape (S, ·) exists on either
+    end of the scan.  Synthesized runs are bit-for-bit identical to running
+    the same spec through ``workload.materialize`` and passing the tensor:
+    the materializer scans the very same registered step functions.
+
+    **Policy-axis sharding** (``num_policy_blocks`` > 1): the named policy
+    list is cut into equal contiguous blocks and this invocation computes
+    only block ``policy_block`` (a traced index — under ``shard_map`` it is
+    ``lax.axis_index("policy")``).  Each block still gets the O(P) unrolled
+    dispatch via ``allocator.policy_stack_blocks``; state/metric rows shrink
+    to P/blocks per device.
+
     Physics (``_queue_step``), EMA seeding, the autoscaler
     (``capacity_step``, vmapped over the policy rows — each policy's queue
     trajectory drives its own warm pool) and the metric finalizer
@@ -401,11 +433,27 @@ def simulate_stream_core(
 
     Returns ``(metrics (P, M), per-agent latency (P, N), per-agent
     throughput (P, N), per-agent queue (P, N))`` with P = len(policy_names)
-    in name order and M = len(METRIC_NAMES).
+    in name order (P/blocks rows of the current block when blocked) and
+    M = len(METRIC_NAMES).
     """
+    from repro.core import workload as workload_mod
+
     names = alloc.policy_names() if policy_names is None else tuple(policy_names)
-    p, n = len(names), fleet.num_agents
-    route_eff, exit_frac, arrivals = _routing_terms(workflow, fleet, arrivals)
+    if (arrivals is None) == (workload_spec is None):
+        raise ValueError("pass exactly one of arrivals= / workload_spec=")
+    synth = workload_spec is not None
+    blocks = int(num_policy_blocks)
+    if blocks > 1:
+        if len(names) % blocks:
+            raise ValueError(
+                f"{len(names)} policies do not split into {blocks} equal blocks"
+            )
+        if policy_block is None:
+            raise ValueError("num_policy_blocks > 1 requires policy_block")
+    p, n = len(names) // blocks, fleet.num_agents
+    route_eff, exit_frac, arrivals, gate = _routing_terms(
+        workflow, fleet, arrivals
+    )
     elastic = capacity is not None
     if elastic:
         # vmap over the policy rows only; the config itself is shared.  The
@@ -414,25 +462,40 @@ def simulate_stream_core(
             cap_mod.capacity_step, in_axes=(0, None, None, 0, 0, 0, None, None)
         )
 
+    def dispatch(t, lam, lam_ema, queue, g_total_t):
+        if blocks > 1:
+            return alloc.policy_stack_blocks(
+                t, lam, lam_ema, queue, fleet, g_total_t, names,
+                blocks, policy_block,
+            )
+        return alloc.policy_stack(t, lam, lam_ema, queue, fleet, g_total_t, names)
+
     def step(carry, inp):
-        if elastic:
-            queue, lam_ema, endo, acc, cstate = carry
+        queue, lam_ema, endo, acc = carry[:4]
+        rest = carry[4:]
+        if synth:
+            t = inp
+            lam_row, wstate = workload_mod.workload_step(
+                workload_spec, rest[0], t
+            )
+            lam_exo = lam_row * gate
+            rest = (wstate,) + rest[1:]
         else:
-            queue, lam_ema, endo, acc = carry
-        t, lam_exo = inp
+            t, lam_exo = inp
         lam = lam_exo + endo            # (P, N) total intake per policy row
         lam_ema = jnp.where(
             t > 0, alloc.ema_forecast(lam_ema, lam, config.ema_alpha), lam_ema
         )
         if elastic:
             cstate, g_total_t, pending_t = cap_step(
-                cstate, capacity, t, lam.sum(axis=-1), lam_ema.sum(axis=-1),
+                rest[-1], capacity, t, lam.sum(axis=-1), lam_ema.sum(axis=-1),
                 queue.sum(axis=-1), config.g_total, config.num_gpus,
             )
+            rest = rest[:-1] + (cstate,)
         else:
             g_total_t = config.g_total  # static python float: the pre-capacity program
             pending_t = jnp.zeros((p,), jnp.float32)
-        g = alloc.policy_stack(t, lam, lam_ema, queue, fleet, g_total_t, names)
+        g = dispatch(t, lam, lam_ema, queue, g_total_t)
         served, new_queue, latency, completed, new_endo = _queue_step(
             queue, lam, g, fleet, config, route_eff, exit_frac
         )
@@ -441,26 +504,38 @@ def simulate_stream_core(
             acc, fleet.active, g, served, new_queue, latency, completed,
             warm_t, pending_t,
         )
-        new_carry = (
-            (new_queue, lam_ema, new_endo, acc, cstate) if elastic
-            else (new_queue, lam_ema, new_endo, acc)
-        )
-        return new_carry, None
+        return (new_queue, lam_ema, new_endo, acc) + rest, None
 
-    num_steps = arrivals.shape[0]
+    if synth:
+        num_steps = workload_spec.num_steps
+        wstate0 = workload_mod.workload_init(workload_spec)
+        # EMA seed = the very row the scan body will synthesize at t=0
+        # (same step function, same fold — bit-identical to arrivals[0]
+        # of the materialized tensor, gated the same way).
+        lam0 = (
+            workload_mod.workload_step(
+                workload_spec, wstate0, jnp.asarray(0, jnp.int32)
+            )[0]
+            * gate
+        )
+    else:
+        num_steps = arrivals.shape[0]
+        lam0 = arrivals[0]
     ts = jnp.arange(num_steps)
     init = (
         jnp.zeros((p, n), jnp.float32),
-        jnp.broadcast_to(arrivals[0], (p, n)),  # EMA seed, as in simulate_core
+        jnp.broadcast_to(lam0, (p, n)),  # EMA seed, as in simulate_core
         jnp.zeros((p, n), jnp.float32),
         init_metric_accum(n, (p,)),
     )
+    if synth:
+        init = init + (wstate0,)
     if elastic:
         init = init + (jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (p,) + x.shape),
             cap_mod.init_capacity_state(config.g_total),
         ),)
-    carry, _ = jax.lax.scan(step, init, (ts, arrivals))
+    carry, _ = jax.lax.scan(step, init, ts if synth else (ts, arrivals))
     acc = carry[3]
     return jax.vmap(
         lambda a: finalize_metrics(

@@ -375,13 +375,15 @@ def _grid_jit(
 
 
 def _stream_grid(
-    arrivals: jnp.ndarray,   # (W, S, N), or (F, W, S, N) when batch_axis="fleet"
+    arrivals: jnp.ndarray | None,  # (W, S, N), or (F, W, S, N) when batch_axis="fleet"
     fleet: Fleet,            # leaves (N,), or (F, N) when batch_axis="fleet"
     workflow: Workflow | None,  # leaves (K, N, N)/(K, N) when batch_axis="workflow"
     capacity: CapacityConfig | None,  # leaves (C,) when batch_axis="capacity"
-    config: SimConfig,
-    names: tuple,
-    batch_axis: str | None,
+    wspec=None,              # stacked WorkloadSpec, leaves (W, ·)/(F, W, ·)
+    config: SimConfig = None,
+    names: tuple = (),
+    batch_axis: str | None = None,
+    num_policy_blocks: int = 1,
 ):
     """The streaming (policy × scenario) grid kernel — the default for
     ``keep_traces=False`` sweeps.
@@ -394,52 +396,76 @@ def _stream_grid(
     fleet/workflow/capacity axis — is vmapped.  ``_grid_jit`` remains the
     trace-materializing parity oracle.
 
+    The workload column is EITHER a materialized arrivals tensor OR a
+    stacked ``WorkloadSpec`` (``wspec``), never both: with a spec each
+    cell's arrival rows are synthesized *inside* the scan
+    (``workload_step``), so nothing of shape (S, ·) exists on the input
+    side either.  With ``num_policy_blocks`` > 1 the kernel runs under the
+    3D mesh and computes only this device's policy block, selected by
+    ``lax.axis_index("policy")`` (``allocator.policy_stack_blocks``).
+
     This function is deliberately unjitted: ``_stream_grid_jit`` wraps it
     for the single-device path and ``_stream_grid_sharded`` runs the exact
     same body per device block under ``shard_map`` — one kernel, two
     placements, no way for the sharded math to drift.
     """
+    block = (
+        jax.lax.axis_index(sharding.POLICY_AXIS)
+        if num_policy_blocks > 1 else None
+    )
 
-    def cell(arr, fl, wf, cp):
-        return simulate_stream_core(arr, fl, config, names, wf, cp)
+    def cell(arr, fl, wf, cp, sp):
+        return simulate_stream_core(
+            arr, fl, config, names, wf, cp, workload_spec=sp,
+            num_policy_blocks=num_policy_blocks, policy_block=block,
+        )
 
+    a_ax = None if arrivals is None else 0
+    s_ax = None if wspec is None else 0
     # out_axes=1: the per-cell policy axis stays leading, scenarios second,
     # matching the trace kernel's (…, P, W, ·) layout.
-    over_scen = jax.vmap(cell, in_axes=(0, None, None, None), out_axes=1)
+    over_scen = jax.vmap(
+        cell, in_axes=(a_ax, None, None, None, s_ax), out_axes=1
+    )
     if batch_axis is None:
-        return over_scen(arrivals, fleet, workflow, capacity)
+        return over_scen(arrivals, fleet, workflow, capacity, wspec)
     outer_axes = {
-        "fleet": (0, 0, None, None),
-        "workflow": (None, None, 0, None),
-        "capacity": (None, None, None, 0),
+        "fleet": (a_ax, 0, None, None, s_ax),
+        "workflow": (None, None, 0, None, None),
+        "capacity": (None, None, None, 0, None),
     }[batch_axis]
     return jax.vmap(over_scen, in_axes=outer_axes)(
-        arrivals, fleet, workflow, capacity
+        arrivals, fleet, workflow, capacity, wspec
     )
 
 
 _stream_grid_jit = functools.partial(
-    jax.jit, static_argnames=("config", "names", "batch_axis")
+    jax.jit,
+    static_argnames=("config", "names", "batch_axis", "num_policy_blocks"),
 )(_stream_grid)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("mesh", "config", "names", "batch_axis"),
+    static_argnames=(
+        "mesh", "config", "names", "batch_axis", "num_policy_blocks"
+    ),
     donate_argnums=(0,),
 )
 def _stream_grid_sharded(
-    arrivals: jnp.ndarray,
+    arrivals: jnp.ndarray | None,
     fleet: Fleet,
     workflow: Workflow | None,
     capacity: CapacityConfig | None,
+    wspec,
     mesh: jax.sharding.Mesh,
     config: SimConfig,
     names: tuple,
     batch_axis: str | None,
+    num_policy_blocks: int = 1,
 ):
-    """The 2D-sharded streaming grid: ``shard_map`` of ``_stream_grid``
-    over the ``("data", "grid")`` mesh.
+    """The sharded streaming grid: ``shard_map`` of ``_stream_grid`` over
+    the ``("data", "grid", "policy")`` mesh.
 
     Each device runs the unchanged per-cell streaming scan on its
     (batch-block × scenario-block) of the grid — cells are independent, so
@@ -449,72 +475,106 @@ def _stream_grid_sharded(
     grids.  Callers must therefore pass a freshly built (or freshly
     padded) array and never reuse it afterwards — every sweep entry point
     rebuilds arrivals per call, which is what keeps second calls safe
-    (tests/test_sharding.py).
+    (tests/test_sharding.py).  A synthesized grid (``wspec`` instead of
+    ``arrivals``) has no slab to donate — its dominant input is O(W · N).
+
+    With ``num_policy_blocks`` > 1 the policy dim of every output shards
+    over the mesh's third axis: each device evaluates only its own block
+    of policy rows (inputs stay replicated along ``policy`` — every block
+    reads the same state).  The default ``dp=1`` path never consults the
+    axis, so it lowers to the exact 2D program.
 
     Axes must already divide the mesh (``_run_grid`` pads them); specs are
     built in ``core/sharding.py::grid_specs``.
     """
-    in_specs, out_spec = sharding.grid_specs(batch_axis)
+    in_specs, out_spec = sharding.grid_specs(
+        batch_axis, policy=num_policy_blocks > 1
+    )
     body = functools.partial(
-        _stream_grid, config=config, names=names, batch_axis=batch_axis
+        _stream_grid, config=config, names=names, batch_axis=batch_axis,
+        num_policy_blocks=num_policy_blocks,
     )
     return shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
         check_rep=False,
-    )(arrivals, fleet, workflow, capacity)
+    )(arrivals, fleet, workflow, capacity, wspec)
 
 
 def _run_stream_sharded(
-    arrivals: jnp.ndarray,
+    arrivals: jnp.ndarray | None,
     fleet: Fleet,
     workflow: Workflow | None,
     capacity: CapacityConfig | None,
     config: SimConfig,
     names: tuple,
     batch_axis: str | None,
+    wspec=None,
+    policy_devices: int = 1,
 ):
-    """Pad the sharded axes to mesh divisibility, run the 2D-sharded
-    streaming kernel, strip the padding host-side.
+    """Pad the sharded axes to mesh divisibility, run the sharded streaming
+    kernel, strip the padding host-side.
 
     Padding repeats row 0 (always-valid cells — the ``active``-mask idiom
     of inert-but-well-posed filler) instead of falling back to whole-axis
     replication, so a non-divisible axis costs at most ``mesh_dim - 1``
     wasted rows rather than ``device_count - 1`` redundant copies of the
     entire grid.  The stripped results are identical to the unpadded grid
-    because cells never interact.
+    because cells never interact.  A stacked ``WorkloadSpec`` pads exactly
+    like the arrivals tensor it replaces (same leading axes, O(N) rows).
+    With ``policy_devices`` (dp) > 1 the *name list* pads the same way —
+    repeating ``names[0]`` up to divisibility, stripped from the output's
+    policy dim — and the kernel dispatches per-device policy blocks.
     """
-    mesh = sharding.grid_mesh()
+    dp = int(policy_devices)
+    mesh = sharding.grid_mesh(policy_devices=dp)
     dd = mesh.shape[sharding.DATA_AXIS]
     dg = mesh.shape[sharding.GRID_AXIS]
+    p = len(names)
+    if dp > 1:
+        names = tuple(names) + (names[0],) * ((-p) % dp)
+
+    def pad(axis_mults):
+        nonlocal arrivals, wspec
+        for axis, mult in axis_mults:
+            if arrivals is not None:
+                arrivals = sharding.pad_axis(arrivals, axis, mult)
+            else:
+                wspec = sharding.pad_tree_axis(wspec, axis, mult)
+
     if batch_axis is None:
-        w = arrivals.shape[0]
-        arrivals = sharding.pad_axis(arrivals, 0, dd * dg)
+        w = arrivals.shape[0] if wspec is None else wspec.gen_id.shape[0]
+        pad([(0, dd * dg)])
         out = _stream_grid_sharded(
-            arrivals, fleet, workflow, capacity, mesh, config, names,
-            batch_axis,
+            arrivals, fleet, workflow, capacity, wspec, mesh, config, names,
+            batch_axis, dp,
         )
-        return tuple(x[:, :w] for x in out)
+        return tuple(x[:p, :w] for x in out)
     if batch_axis == "fleet":
-        b, w = arrivals.shape[:2]
-        arrivals = sharding.pad_axis(sharding.pad_axis(arrivals, 0, dd), 1, dg)
+        b, w = (
+            arrivals.shape[:2] if wspec is None else wspec.gen_id.shape[:2]
+        )
+        pad([(0, dd), (1, dg)])
         fleet = sharding.pad_tree_axis(fleet, 0, dd)
     elif batch_axis == "workflow":
-        b, w = workflow.route.shape[0], arrivals.shape[0]
-        arrivals = sharding.pad_axis(arrivals, 0, dg)
+        b = workflow.route.shape[0]
+        w = arrivals.shape[0] if wspec is None else wspec.gen_id.shape[0]
+        pad([(0, dg)])
         workflow = sharding.pad_tree_axis(workflow, 0, dd)
     else:
-        b, w = capacity.policy_id.shape[0], arrivals.shape[0]
-        arrivals = sharding.pad_axis(arrivals, 0, dg)
+        b = capacity.policy_id.shape[0]
+        w = arrivals.shape[0] if wspec is None else wspec.gen_id.shape[0]
+        pad([(0, dg)])
         capacity = sharding.pad_tree_axis(capacity, 0, dd)
     out = _stream_grid_sharded(
-        arrivals, fleet, workflow, capacity, mesh, config, names, batch_axis
+        arrivals, fleet, workflow, capacity, wspec, mesh, config, names,
+        batch_axis, dp,
     )
-    return tuple(x[:b, :, :w] for x in out)
+    return tuple(x[:b, :p, :w] for x in out)
 
 
 def _run_grid(
     pids: jnp.ndarray,
-    arrivals: jnp.ndarray,
+    arrivals: jnp.ndarray | None,
     fleet: Fleet,
     workflow: Workflow | None,
     capacity: CapacityConfig | None,
@@ -525,11 +585,17 @@ def _run_grid(
     stream: bool | None,
     batch_axis: str | None,
     shard: bool | None = None,
+    wspec=None,
 ):
     """Pick the kernel and placement for one sweep call: streaming by
-    default — 2D-sharded over the ``("data", "grid")`` mesh whenever more
-    than one device is live (``sharding.should_shard``) — and the
-    trace-based oracle when traces are requested or ``stream=False``.
+    default — sharded over the ``("data", "grid", "policy")`` mesh whenever
+    more than one device is live (``sharding.should_shard``; the policy
+    axis only splits when requested, ``sharding.policy_mesh_devices``) —
+    and the trace-based oracle when traces are requested or
+    ``stream=False``.  The workload column arrives EITHER materialized
+    (``arrivals``) or as a stacked ``WorkloadSpec`` (``wspec``) for in-scan
+    synthesis; the entry points materialize specs host-side before any
+    non-streaming call, so the trace oracle only ever sees tensors.
 
     Returns the kernel's device-array tuple — (metrics, per-lat, per-tput,
     per-queue[, traces]).
@@ -541,14 +607,22 @@ def _run_grid(
             "never materializes traces; use keep_traces=True with "
             "stream=False (or leave stream unset)"
         )
+    if wspec is not None and not streamed:
+        raise ValueError(
+            "in-scan synthesis runs inside the streaming kernel; "
+            "materialize the specs for the trace oracle"
+        )
     sharded = sharding.should_shard(shard)
     if streamed:
         if sharded:
             return _run_stream_sharded(
-                arrivals, fleet, workflow, capacity, config, names, batch_axis
+                arrivals, fleet, workflow, capacity, config, names,
+                batch_axis, wspec=wspec,
+                policy_devices=sharding.policy_mesh_devices(shard),
             )
         return _stream_grid_jit(
-            arrivals, fleet, workflow, capacity, config, names, batch_axis
+            arrivals, fleet, workflow, capacity, wspec, config, names,
+            batch_axis,
         )
     if sharded and batch_axis == "fleet":
         # The parity oracle keeps the pre-shard_map layout-hint path: pad
@@ -591,6 +665,51 @@ def _shard_fleet_axis(stacked: Fleet, arrivals: jnp.ndarray, mesh=None):
     return jax.device_put(stacked, layout), jax.device_put(arrivals, layout)
 
 
+def _prepare_scenarios(
+    scenarios, synthesize: bool | None, streamed: bool
+) -> tuple[tuple[str, ...], jnp.ndarray | None, "workload.WorkloadSpec | None"]:
+    """Resolve one sweep call's workload column: (names, arrivals, wspec).
+
+    ``scenarios`` is a homogeneous list of either ``Scenario`` tensors (the
+    classic path — ``synthesize`` must stay unset/False) or
+    ``workload.WorkloadSpec`` rows.  Specs run **in-scan** (``wspec``
+    returned, ``arrivals=None``) when synthesis is on — the default for
+    specs — AND the call streams AND the ``REPRO_SWEEP_SYNTH`` hatch is not
+    "0"; otherwise they are materialized host-side via
+    ``workload.materialize``, which scans the very same registered step
+    functions, so both arms are bit-for-bit identical by construction
+    (the acceptance contract, tests/test_workload_synthesis.py).
+    """
+    scenarios = list(scenarios)
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    spec_like = [isinstance(s, workload.WorkloadSpec) for s in scenarios]
+    names = tuple(s.name for s in scenarios)
+    if any(spec_like):
+        if not all(spec_like):
+            raise ValueError(
+                "scenarios must be all Scenario or all WorkloadSpec, not a mix"
+            )
+        synth = True if synthesize is None else bool(synthesize)
+        if synth and streamed and workload.synth_env_enabled():
+            return names, None, workload.stack_specs(scenarios)
+        return names, jnp.stack(
+            [workload.materialize(s) for s in scenarios]
+        ), None
+    if synthesize:
+        raise ValueError(
+            "synthesize=True needs WorkloadSpec scenarios "
+            "(e.g. workload.scenario_specs); got materialized Scenario tensors"
+        )
+    return names, jnp.stack(
+        [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
+    ), None
+
+
+def _streamed(keep_traces: bool, stream: bool | None) -> bool:
+    return (not keep_traces) if stream is None else bool(stream)
+
+
 def sweep(
     fleet: Fleet,
     scenarios: Sequence[Scenario],
@@ -601,6 +720,7 @@ def sweep(
     stream: bool | None = None,
     return_arrays: bool = False,
     shard: bool | None = None,
+    synthesize: bool | None = None,
 ) -> SweepResult | tuple:
     """Evaluate ``policies`` (default: the whole registry) × ``scenarios``.
 
@@ -615,9 +735,19 @@ def sweep(
     transfer and returns the kernel's raw device arrays — the benchmark
     timing surface (``jax.block_until_ready`` them to time device work).
     On a multi-device host the scenario axis of the streaming grid shards
-    over the full 2D mesh (``core/sharding.py``); ``shard=False`` — or
-    ``REPRO_SWEEP_SHARD=0`` in the environment — forces the single-device
-    path.
+    over the full (data × grid) mesh plane (``core/sharding.py``);
+    ``shard=False`` — or ``REPRO_SWEEP_SHARD=0`` in the environment —
+    forces the single-device path, and ``shard="3d"`` additionally splits
+    the policy axis over the mesh's third dimension.
+
+    ``scenarios`` may be ``workload.WorkloadSpec`` rows instead of
+    materialized ``Scenario`` tensors: by default (``synthesize=None`` or
+    ``True``) their arrival rows are then synthesized *inside* the scan —
+    the input side never materializes an (S, N) slab, making S = 10⁶⁺
+    horizons feasible.  ``synthesize=False`` (or ``REPRO_SWEEP_SYNTH=0``,
+    or any trace-oracle run) materializes the same specs host-side via the
+    same registered step functions — bit-for-bit identical results, the
+    synthesis parity oracle.
     """
     fleet.validate()
     if capacity is not None:
@@ -625,12 +755,13 @@ def sweep(
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
-    arrivals = jnp.stack(
-        [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
-    )  # (W, S, N)
+    scen_names, arrivals, wspec = _prepare_scenarios(
+        scenarios, synthesize, _streamed(keep_traces, stream)
+    )  # (W, S, N) | stacked spec
 
     out = _run_grid(pids, arrivals, fleet, None, capacity, config,
-                       reg_names, names, keep_traces, stream, None, shard)
+                       reg_names, names, keep_traces, stream, None, shard,
+                       wspec=wspec)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -638,7 +769,7 @@ def sweep(
 
     return SweepResult(
         policy_names=names,
-        scenario_names=tuple(s.name for s in scenarios),
+        scenario_names=scen_names,
         metrics=metrics,
         per_agent_latency=per_lat,
         per_agent_throughput=per_tput,
@@ -660,6 +791,7 @@ def sweep_fleets(
     shard: bool | None = True,
     stream: bool | None = None,
     return_arrays: bool = False,
+    synthesize: bool | None = None,
 ) -> SweepResult | tuple:
     """One jitted (fleet × policy × scenario) grid over heterogeneous fleets.
 
@@ -679,6 +811,14 @@ def sweep_fleets(
     ``keep_traces=False``) is what makes the long-horizon end of this grid
     feasible at all: peak memory per cell is O(N), not O(S · N), so
     N = 1024 fleets over 10⁴-step horizons fit on a single host.
+
+    ``synthesize`` selects the workload column's representation:
+    ``None`` (default) keeps the legacy materialized
+    ``fleet_scenario_library`` tensors; ``True`` builds the matched
+    per-fleet ``workload.fleet_scenario_specs`` and synthesizes arrivals
+    *in-scan* (no (F, W, S, N) slab is ever built — the horizon-frontier
+    mode); ``False`` materializes those same specs host-side (the
+    synthesis parity arm, bit-identical to ``True`` by construction).
     """
     fleets = list(fleets)
     if not fleets:
@@ -705,16 +845,36 @@ def sweep_fleets(
         fleet_names = tuple(fleet_names)
 
     stacked = stack_fleets(fleets)
-    scen_names, arrivals = fleet_scenario_library(
-        rate_vectors, stacked.num_agents, num_steps, seed
-    )  # (F, W, S, N_max)
+    wspec = None
+    if synthesize is None:
+        scen_names, arrivals = fleet_scenario_library(
+            rate_vectors, stacked.num_agents, num_steps, seed
+        )  # (F, W, S, N_max)
+    else:
+        scen_names, spec_rows = workload.fleet_scenario_specs(
+            rate_vectors, stacked.num_agents, num_steps, seed
+        )
+        cols = [
+            workload.stack_specs(row, name=f"fleet{i}")
+            for i, row in enumerate(spec_rows)
+        ]
+        if (synthesize and _streamed(keep_traces, stream)
+                and workload.synth_env_enabled()):
+            arrivals = None
+            wspec = workload.stack_specs(cols, name="fleet_grid")
+        else:
+            arrivals = jnp.stack([
+                jnp.stack([workload.materialize(s) for s in row])
+                for row in spec_rows
+            ])  # the parity arm: same step functions, host-scanned
 
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
     out = _run_grid(pids, arrivals, stacked, None, None, config,
-                       reg_names, names, keep_traces, stream, "fleet", shard)
+                       reg_names, names, keep_traces, stream, "fleet", shard,
+                       wspec=wspec)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -764,6 +924,7 @@ def sweep_workflows(
     stream: bool | None = None,
     return_arrays: bool = False,
     shard: bool | None = None,
+    synthesize: bool | None = None,
 ) -> SweepResult | tuple:
     """One jitted (workflow × policy × scenario) grid over one fleet.
 
@@ -794,12 +955,14 @@ def sweep_workflows(
     stacked_wf = stack_workflows(workflows)  # all widths == n after the check
 
     if scenarios is None:
-        scenarios = scenario_library(
-            workload.synthetic_rates(n, seed=seed), num_steps, seed
+        rates = workload.synthetic_rates(n, seed=seed)
+        scenarios = (
+            workload.scenario_specs(rates, num_steps, seed) if synthesize
+            else scenario_library(rates, num_steps, seed)
         )
-    arrivals = jnp.stack(
-        [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
-    )  # (W, S, N)
+    scen_names, arrivals, wspec = _prepare_scenarios(
+        scenarios, synthesize, _streamed(keep_traces, stream)
+    )  # (W, S, N) | stacked spec
 
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
@@ -807,7 +970,7 @@ def sweep_workflows(
 
     out = _run_grid(pids, arrivals, fleet, stacked_wf, None, config,
                        reg_names, names, keep_traces, stream, "workflow",
-                       shard)
+                       shard, wspec=wspec)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -815,7 +978,7 @@ def sweep_workflows(
 
     return SweepResult(
         policy_names=names,
-        scenario_names=tuple(s.name for s in scenarios),
+        scenario_names=scen_names,
         metrics=metrics,
         per_agent_latency=per_lat,
         per_agent_throughput=per_tput,
@@ -877,6 +1040,7 @@ def sweep_capacity(
     stream: bool | None = None,
     return_arrays: bool = False,
     shard: bool | None = None,
+    synthesize: bool | None = None,
 ) -> SweepResult | tuple:
     """One jitted (capacity × policy × scenario) grid over one fleet.
 
@@ -907,12 +1071,14 @@ def sweep_capacity(
     stacked_cap = stack_capacities(capacities)
 
     if scenarios is None:
-        scenarios = scenario_library(
-            workload.synthetic_rates(fleet.num_agents, seed=seed), num_steps, seed
+        rates = workload.synthetic_rates(fleet.num_agents, seed=seed)
+        scenarios = (
+            workload.scenario_specs(rates, num_steps, seed) if synthesize
+            else scenario_library(rates, num_steps, seed)
         )
-    arrivals = jnp.stack(
-        [jnp.asarray(s.arrivals, jnp.float32) for s in scenarios]
-    )  # (W, S, N)
+    scen_names, arrivals, wspec = _prepare_scenarios(
+        scenarios, synthesize, _streamed(keep_traces, stream)
+    )  # (W, S, N) | stacked spec
 
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
@@ -920,7 +1086,7 @@ def sweep_capacity(
 
     out = _run_grid(pids, arrivals, fleet, None, stacked_cap, config,
                        reg_names, names, keep_traces, stream, "capacity",
-                       shard)
+                       shard, wspec=wspec)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -928,7 +1094,7 @@ def sweep_capacity(
 
     return SweepResult(
         policy_names=names,
-        scenario_names=tuple(s.name for s in scenarios),
+        scenario_names=scen_names,
         metrics=metrics,
         per_agent_latency=per_lat,
         per_agent_throughput=per_tput,

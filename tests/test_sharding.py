@@ -1,23 +1,26 @@
-"""2D-mesh sharding invariants — ``core/sharding.py`` + the shard_map path.
+"""Device-mesh sharding invariants — ``core/sharding.py`` + shard_map.
 
 Three layers of coverage:
 
-* **Pure unit tests** (any device count): mesh factorization, padding
-  semantics, mesh caching, the ``REPRO_SWEEP_SHARD`` escape hatch, and the
+* **Pure unit tests** (any device count): 2D and near-cubic 3D mesh
+  factorization, policy-axis (dp) resolution, padding semantics, mesh
+  caching, the ``REPRO_SWEEP_SHARD`` escape hatch, and the
   backend-initialization guard on ``force_host_device_count``.
 * **In-process multi-device tests** — run when the interpreter already
   sees >= 2 devices (CI's dedicated step sets ``XLA_FLAGS=--xla_force_
-  host_platform_device_count=8``): (a) the 2D-sharded streaming grid
+  host_platform_device_count=8``): (a) the sharded streaming grid
   matches the unsharded trace oracle for the FULL policy registry, (b)
   sharded metrics are **bit-identical** to unsharded for all four sweep
   entry points — including non-divisible axis sizes, where the padded
   rows must strip away without a trace (cells are independent and the
   shard body is the very same ``_stream_grid`` the single-device jit
   runs, so exact equality is the contract, not a tolerance), (c) arrivals
-  donation does not poison second calls.
+  donation does not poison second calls, (d) the 3D policy axis
+  (``shard="3d"`` / ``REPRO_SWEEP_POLICY_DEVICES``) and the in-scan
+  synthesized path are each bit-identical to their unsharded twins.
 * **Subprocess fallback** (single-device runs): one forced-8-device child
-  re-runs the entry-point grids sharded and the parent compares against
-  its own single-device references.
+  re-runs the entry-point grids sharded (2D and 3D) and the parent
+  compares against its own single-device references.
 """
 import os
 import subprocess
@@ -38,6 +41,7 @@ from repro.core.sweep import (
     sweep_fleets,
     sweep_workflows,
 )
+from repro.core import workload
 from repro.core.workload import synthetic_rates
 
 SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
@@ -94,10 +98,54 @@ def test_pad_tree_axis_pads_every_leaf_and_keeps_aux():
     assert padded.names == stacked.names  # static aux untouched
 
 
+def test_mesh_shape_3d_near_cubic_policy_minor():
+    assert sharding.mesh_shape_3d(1) == (1, 1, 1)
+    assert sharding.mesh_shape_3d(4) == (2, 2, 1)   # 2^3 > 4: dp stays 1
+    assert sharding.mesh_shape_3d(7) == (1, 7, 1)   # prime: all on grid
+    assert sharding.mesh_shape_3d(8) == (2, 2, 2)
+    assert sharding.mesh_shape_3d(16) == (2, 4, 2)
+    assert sharding.mesh_shape_3d(27) == (3, 3, 3)
+    assert sharding.mesh_shape_3d(64) == (4, 4, 4)
+    for n in range(1, 33):
+        dd, dg, dp = sharding.mesh_shape_3d(n)
+        assert dd * dg * dp == n and dd <= dg and dp ** 3 <= n
+    with pytest.raises(ValueError):
+        sharding.mesh_shape_3d(0)
+
+
 def test_grid_mesh_is_cached():
     assert sharding.grid_mesh() is sharding.grid_mesh()
     dd, dg = sharding.mesh_shape(jax.device_count())
-    assert sharding.grid_mesh().shape == {"data": dd, "grid": dg}
+    # The mesh always carries the policy axis; dp=1 is the 2D layout
+    # (arrays never shard over a size-1 axis, so pre-3D programs are
+    # unchanged by construction).
+    assert sharding.grid_mesh().shape == {"data": dd, "grid": dg, "policy": 1}
+
+
+def test_grid_mesh_rejects_non_divisible_policy_axis():
+    with pytest.raises(ValueError, match="must divide"):
+        sharding.grid_mesh(num_devices=8, policy_devices=3)
+
+
+def test_policy_mesh_devices_resolution(monkeypatch):
+    monkeypatch.delenv(sharding.POLICY_ENV, raising=False)
+    monkeypatch.delenv(sharding.MESH3D_ENV, raising=False)
+    monkeypatch.delenv(sharding.SHARD_ENV, raising=False)
+    # Pretend 8 devices so resolution logic is exercised on any host.
+    monkeypatch.setattr(
+        sharding, "should_shard", lambda flag=None: flag is not False
+    )
+    monkeypatch.setattr(sharding.jax, "device_count", lambda: 8)
+    assert sharding.policy_mesh_devices(True) == 1       # default: 2D layout
+    assert sharding.policy_mesh_devices("3d") == 2       # near-cubic 8 -> dp=2
+    monkeypatch.setenv(sharding.MESH3D_ENV, "1")
+    assert sharding.policy_mesh_devices(True) == 2       # global 3D switch
+    monkeypatch.setenv(sharding.POLICY_ENV, "4")
+    assert sharding.policy_mesh_devices(True) == 4       # explicit dp wins
+    monkeypatch.setenv(sharding.POLICY_ENV, "3")
+    with pytest.raises(ValueError, match="must divide"):
+        sharding.policy_mesh_devices(True)
+    assert sharding.policy_mesh_devices(False) == 1      # sharding off
 
 
 def test_should_shard_resolution(monkeypatch):
@@ -131,28 +179,38 @@ def test_host_device_env_sets_flag_and_strips_stale_one():
 # -- grid helpers ------------------------------------------------------------
 
 
-def _fleet_grid(shard, sizes=ODD_FLEET_SIZES, stream=None, policies=POLICIES):
+def _fleet_grid(shard, sizes=ODD_FLEET_SIZES, stream=None, policies=POLICIES,
+                synthesize=None):
     fleets = [synthetic_fleet(n, seed=i) for i, n in enumerate(sizes)]
     return sweep_fleets(
         fleets, num_steps=NUM_STEPS, seed=0, policies=policies, shard=shard,
-        stream=stream,
+        stream=stream, synthesize=synthesize,
     ).metrics
 
 
-def _entry_grids(shard):
-    """Metrics from all four entry points under one shard setting."""
+def _entry_grids(shard, synthesize=None):
+    """Metrics from all four entry points under one shard setting.
+
+    ``synthesize=True`` swaps the workload column to ``WorkloadSpec`` rows
+    (in-scan synthesis when streaming) — same grid values bit-for-bit, per
+    the synthesis parity contract."""
     fleet = synthetic_fleet(4, seed=0)
-    scenarios = scenario_library(
-        synthetic_rates(4, seed=0), num_steps=NUM_STEPS
-    )
+    rates = synthetic_rates(4, seed=0)
+    if synthesize:
+        scenarios = workload.scenario_specs(rates, num_steps=NUM_STEPS)
+    else:
+        scenarios = scenario_library(rates, num_steps=NUM_STEPS)
     return {
-        "sweep": sweep(fleet, scenarios, policies=POLICIES, shard=shard).metrics,
-        "fleets": _fleet_grid(shard),
+        "sweep": sweep(fleet, scenarios, policies=POLICIES, shard=shard,
+                       synthesize=synthesize).metrics,
+        "fleets": _fleet_grid(shard, synthesize=synthesize),
         "workflows": sweep_workflows(
-            fleet, num_steps=NUM_STEPS, policies=POLICIES, shard=shard
+            fleet, num_steps=NUM_STEPS, policies=POLICIES, shard=shard,
+            synthesize=synthesize,
         ).metrics,
         "capacity": sweep_capacity(
-            fleet, num_steps=NUM_STEPS, policies=POLICIES, shard=shard
+            fleet, num_steps=NUM_STEPS, policies=POLICIES, shard=shard,
+            synthesize=synthesize,
         ).metrics,
     }
 
@@ -214,6 +272,45 @@ def test_donation_does_not_poison_second_calls():
 
 
 @multi_device
+def test_3d_policy_axis_bit_identical_to_unsharded():
+    """(d) ``shard="3d"`` splits the policy stack over the mesh's third
+    axis (8 devices -> dp=2); the blocked ``lax.switch`` dispatch runs the
+    same per-policy branches as the flat stack, so exact equality holds
+    for all four entry points."""
+    three_d, unsharded = _entry_grids("3d"), _entry_grids(False)
+    for name in three_d:
+        np.testing.assert_array_equal(
+            three_d[name], unsharded[name], err_msg=name
+        )
+
+
+@multi_device
+def test_policy_devices_env_override_bit_identical(monkeypatch):
+    """Explicit dp via ``REPRO_SWEEP_POLICY_DEVICES`` — dp=4 on 8 devices
+    is a (1, 2, 4) mesh and pads the 3-policy stack to 4 rows; the padded
+    policy row must strip without residue."""
+    monkeypatch.setenv(sharding.POLICY_ENV, "4")
+    grids = _fleet_grid(shard=True)
+    monkeypatch.delenv(sharding.POLICY_ENV)
+    np.testing.assert_array_equal(grids, _fleet_grid(shard=False))
+
+
+@multi_device
+def test_synthesized_sharded_bit_identical_to_unsharded():
+    """(d) In-scan synthesis under the sharded grid, 2D and 3D: scenario
+    rows are ``WorkloadSpec`` pytrees (the spec stack shards like the
+    arrivals block it replaces), no (S, N) slab ever materializes, and the
+    metrics must equal the unsharded synthesized grid exactly."""
+    reference = _entry_grids(False, synthesize=True)
+    for shard in (True, "3d"):
+        grids = _entry_grids(shard, synthesize=True)
+        for name in grids:
+            np.testing.assert_array_equal(
+                grids[name], reference[name], err_msg=f"{shard}:{name}"
+            )
+
+
+@multi_device
 def test_escape_hatch_forces_unsharded_path(monkeypatch):
     monkeypatch.setenv(sharding.SHARD_ENV, "0")
     hatch = _fleet_grid(shard=None)
@@ -231,7 +328,8 @@ assert jax.device_count() == 8, jax.devices()
 import tests.test_sharding as t
 grids = t._entry_grids(True)
 odd = t._fleet_grid(shard=True)
-np.savez({out!r}, odd=odd, **grids)
+odd3d = t._fleet_grid(shard="3d")
+np.savez({out!r}, odd=odd, odd3d=odd3d, **grids)
 """
 
 
@@ -242,6 +340,7 @@ np.savez({out!r}, odd=odd, **grids)
 def test_sharded_8_device_subprocess_matches_single_device():
     references = _entry_grids(False)
     references["odd"] = _fleet_grid(shard=False)
+    references["odd3d"] = references["odd"]  # same unsharded reference
     root = os.path.dirname(SRC)
     env = sharding.host_device_env(8)
     env["PYTHONPATH"] = os.pathsep.join(

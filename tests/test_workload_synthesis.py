@@ -1,0 +1,273 @@
+"""In-scan workload synthesis — registry semantics + the parity contract.
+
+The streaming kernel can synthesize step t's arrival row *inside* the scan
+from an O(N) ``WorkloadSpec`` instead of indexing a materialized (S, N)
+tensor.  The acceptance contract is **bit-for-bit equality** between the
+two arms — not a tolerance — because ``workload.materialize`` scans the
+very same registered step functions the in-scan arm runs.  Three parity
+layers here:
+
+* **Generator layer** — ``materialize(spec)`` against
+  ``reference_sim.synthesize_loop`` (an eager python loop threading the
+  generator state by hand), exact, for every library spec and
+  hypothesis-driven over (generator × key × horizon) including the MMPP
+  carry of ``bursty``/``correlated``.
+* **Kernel layer** — ``simulate_stream_core`` with ``workload_spec=`` vs
+  the same spec materialized to an arrivals tensor, exact, including the
+  FMA-sensitive ``predictive`` policy (see ``allocator._committed``).
+* **Entry-point layer** — all four sweep entry points with
+  ``synthesize=True`` vs ``synthesize=False``, exact; plus the
+  ``REPRO_SWEEP_SYNTH=0`` escape hatch, the tensor+synthesize=True
+  rejection, and key-reproducibility of ``synthetic_rates``.
+
+The float64 numpy oracle closes the loop: a synthesized workload pushed
+through ``simulate`` matches ``simulate_numpy`` on the eager-loop tensor.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import workload
+from repro.core.agents import synthetic_fleet
+from repro.core.reference_sim import simulate_numpy, synthesize_loop
+from repro.core.simulator import SimConfig, simulate, simulate_stream_core
+from repro.core.sweep import (
+    scenario_library,
+    sweep,
+    sweep_capacity,
+    sweep_fleets,
+    sweep_workflows,
+)
+from repro.core.workload import synthetic_rates
+
+NUM_STEPS = 12
+RATES = synthetic_rates(4, seed=0)
+FLEET = synthetic_fleet(4, seed=0)
+# predictive is deliberately included: its EMA update is the one place the
+# synthesized and materialized executables used to diverge by 1 ulp (FMA
+# contraction; pinned by allocator._committed).
+POLICIES = ("static_equal", "adaptive", "predictive")
+
+
+def _spec_for(gen: str, rates, steps: int, key) -> workload.WorkloadSpec:
+    """One library spec per registered generator name."""
+    if gen == "constant":
+        return workload.constant_spec(rates, steps)
+    if gen == "poisson":
+        return workload.poisson_spec(rates, steps, key)
+    if gen == "spike":
+        return workload.spike_spec(
+            rates, steps, spike_agent=1, spike_start=steps // 2,
+            spike_len=max(steps // 4, 1),
+        )
+    if gen == "diurnal":
+        return workload.diurnal_spec(rates, steps, period=5)
+    if gen == "bursty":
+        return workload.bursty_spec(rates, steps, key)
+    if gen == "correlated":
+        return workload.correlated_spec(rates, steps, key)
+    raise AssertionError(gen)
+
+
+# -- registry semantics ------------------------------------------------------
+
+
+def test_registry_names_ids_round_trip():
+    names = workload.workload_names()
+    assert set(names) == {
+        "constant", "poisson", "spike", "diurnal", "bursty", "correlated"
+    }
+    for i, name in enumerate(names):
+        assert workload.workload_id(name) == i
+    with pytest.raises(ValueError):
+        workload.workload_id("nope")
+
+
+def test_register_rejects_duplicate_name():
+    with pytest.raises(ValueError, match="already registered"):
+        workload.register_workload("constant")(lambda *a: a)
+
+
+def test_scenario_specs_mirror_library_names():
+    specs = workload.scenario_specs(RATES, num_steps=NUM_STEPS)
+    library = scenario_library(RATES, num_steps=NUM_STEPS)
+    assert tuple(s.name for s in specs) == tuple(s.name for s in library)
+
+
+def test_synthetic_rates_key_reproducible():
+    np.testing.assert_array_equal(
+        synthetic_rates(6, seed=3), synthetic_rates(6, seed=3)
+    )
+    assert not np.array_equal(
+        synthetic_rates(6, seed=3), synthetic_rates(6, seed=4)
+    )
+
+
+# -- generator layer: materialize vs the eager python loop -------------------
+
+
+def test_materialize_matches_eager_loop_all_library_specs():
+    for spec in workload.scenario_specs(RATES, num_steps=NUM_STEPS):
+        np.testing.assert_array_equal(
+            np.asarray(workload.materialize(spec), np.float64),
+            synthesize_loop(spec),
+            err_msg=spec.name,
+        )
+
+
+def test_mmpp_carry_parity_long_horizon():
+    """bursty/correlated thread MMPP state through the scan carry; a longer
+    horizon catches any drift in how the state is re-threaded."""
+    for gen in ("bursty", "correlated"):
+        spec = _spec_for(gen, RATES, 60, jax.random.key(7))
+        np.testing.assert_array_equal(
+            np.asarray(workload.materialize(spec), np.float64),
+            synthesize_loop(spec),
+            err_msg=gen,
+        )
+
+
+@hypothesis.given(
+    gen=st.sampled_from(
+        ("constant", "poisson", "spike", "diurnal", "bursty", "correlated")
+    ),
+    seed=st.integers(0, 2**31 - 1),
+    steps=st.sampled_from((1, 3, 7, 20)),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_generator_parity_property(gen, seed, steps):
+    """Every generator × key × horizon: the scan and the eager loop agree
+    bit-for-bit (the counter-based fold_in draw has no sequential state to
+    desynchronize)."""
+    spec = _spec_for(gen, RATES, steps, jax.random.key(seed))
+    np.testing.assert_array_equal(
+        np.asarray(workload.materialize(spec), np.float64),
+        synthesize_loop(spec),
+    )
+
+
+# -- kernel layer: in-scan synthesis vs materialized arrivals ----------------
+
+
+def _stream_pair(spec, **kwargs):
+    config = SimConfig()
+    mat = simulate_stream_core(
+        workload.materialize(spec), FLEET, config, POLICIES, **kwargs
+    )
+    synth = simulate_stream_core(
+        None, FLEET, config, POLICIES, workload_spec=spec, **kwargs
+    )
+    return mat, synth
+
+
+def test_stream_core_synth_bit_identical_all_library_specs():
+    for spec in workload.scenario_specs(RATES, num_steps=NUM_STEPS):
+        mat, synth = _stream_pair(spec)
+        for m, s in zip(mat, synth):
+            np.testing.assert_array_equal(
+                np.asarray(m), np.asarray(s), err_msg=spec.name
+            )
+
+
+@hypothesis.given(
+    gen=st.sampled_from(
+        ("constant", "poisson", "spike", "diurnal", "bursty", "correlated")
+    ),
+    seed=st.integers(0, 2**31 - 1),
+    steps=st.sampled_from((5, 13)),
+)
+@hypothesis.settings(max_examples=18, deadline=None)
+def test_stream_core_parity_property(gen, seed, steps):
+    """The full kernel contract: every workload type × key × horizon, the
+    in-scan arm equals the materialized arm exactly — MMPP carry, EMA
+    seeding, and the predictive policy's FMA-pinned update included."""
+    spec = _spec_for(gen, RATES, steps, jax.random.key(seed))
+    mat, synth = _stream_pair(spec)
+    for m, s in zip(mat, synth):
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(s))
+
+
+def test_stream_core_requires_exactly_one_input_side():
+    arr = workload.materialize(workload.constant_spec(RATES, NUM_STEPS))
+    spec = workload.constant_spec(RATES, NUM_STEPS)
+    with pytest.raises(ValueError, match="exactly one"):
+        simulate_stream_core(arr, FLEET, SimConfig(), POLICIES,
+                             workload_spec=spec)
+    with pytest.raises(ValueError, match="exactly one"):
+        simulate_stream_core(None, FLEET, SimConfig(), POLICIES)
+
+
+# -- entry-point layer -------------------------------------------------------
+
+
+def _entry_grids(synthesize):
+    """All four entry points on the SAME spec scenarios.
+
+    ``scenarios=`` is passed explicitly where the entry point would
+    otherwise default to the legacy tensor library for ``synthesize=False``
+    (legitimately different stochastic draws — the parity contract is
+    between the two *arms over the same specs*, not specs vs legacy)."""
+    specs = workload.scenario_specs(RATES, num_steps=NUM_STEPS)
+    fleets = [synthetic_fleet(n, seed=i) for i, n in enumerate((2, 3, 4))]
+    return {
+        "sweep": sweep(FLEET, specs, policies=POLICIES,
+                       synthesize=synthesize).metrics,
+        # sweep_fleets builds matched per-fleet specs for any non-None
+        # synthesize; False is its documented materialized parity arm.
+        "fleets": sweep_fleets(fleets, num_steps=NUM_STEPS, seed=0,
+                               policies=POLICIES,
+                               synthesize=synthesize).metrics,
+        "workflows": sweep_workflows(FLEET, scenarios=specs,
+                                     num_steps=NUM_STEPS, policies=POLICIES,
+                                     synthesize=synthesize).metrics,
+        "capacity": sweep_capacity(FLEET, scenarios=specs,
+                                   num_steps=NUM_STEPS, policies=POLICIES,
+                                   synthesize=synthesize).metrics,
+    }
+
+
+def test_all_entry_points_synth_bit_identical_to_materialized():
+    synth, mat = _entry_grids(True), _entry_grids(False)
+    for name in synth:
+        np.testing.assert_array_equal(synth[name], mat[name], err_msg=name)
+
+
+def test_synth_env_hatch_forces_materialized_path(monkeypatch):
+    reference = _entry_grids(True)
+    monkeypatch.setenv(workload.SYNTH_ENV, "0")
+    assert not workload.synth_env_enabled()
+    hatch = _entry_grids(True)  # synthesize=True, but the hatch wins
+    for name in hatch:
+        np.testing.assert_array_equal(hatch[name], reference[name],
+                                      err_msg=name)
+
+
+def test_tensor_scenarios_reject_synthesize():
+    tensors = scenario_library(RATES, num_steps=NUM_STEPS)
+    with pytest.raises(ValueError, match="WorkloadSpec"):
+        sweep(FLEET, tensors, policies=POLICIES, synthesize=True)
+    specs = workload.scenario_specs(RATES, num_steps=NUM_STEPS)
+    with pytest.raises(ValueError, match="not a mix"):
+        sweep(FLEET, [tensors[0], specs[0]], policies=POLICIES)
+
+
+# -- oracle closure ----------------------------------------------------------
+
+
+def test_synthesized_workload_matches_numpy_oracle():
+    """Synthesis feeding the float64 oracle: ``simulate`` on the
+    materialized spec vs ``simulate_numpy`` on the eager-loop tensor —
+    the two independent control-flow paths meet within float tolerance."""
+    spec = workload.bursty_spec(RATES, 40, jax.random.key(11))
+    arrivals = synthesize_loop(spec)
+    for policy in ("adaptive", "predictive", "water_filling"):
+        tr = simulate(policy, jnp.asarray(arrivals, jnp.float32), FLEET)
+        ref = simulate_numpy(policy, arrivals, FLEET)
+        for field in ("queue", "served", "latency"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(tr, field), np.float64), ref[field],
+                rtol=2e-4, atol=2e-3, err_msg=f"{policy}/{field}",
+            )
