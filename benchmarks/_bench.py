@@ -21,7 +21,9 @@ schema is deliberately boring and append-only:
 Per-entry keys are the writer's contract; the two current writers
 (``fleet_scaling``, ``sweep_grid``) emit ``kernel`` ("streaming"|"trace"),
 ``wall_us``, ``us_per_step``, ``us_per_step_per_cell``, ``cells``,
-``num_steps``.  The best-effort memory probes below appear only on entries
+``num_steps``, plus ``block_size`` (the streaming time-block B the row
+ran at; 1 = single-level scan) and ``compile_s`` (cold
+``compile_probe`` seconds, ``None`` when not probed).  The best-effort memory probes below appear only on entries
 where the reading is attributable (``fleet_scaling``'s ``memory_probe``
 grid, which runs before anything heavier, and the ``frontier`` grid) —
 ``ru_maxrss`` is a process-wide high-water mark, so stamping it on every
@@ -61,6 +63,21 @@ def time_device(fn, reps: int) -> float:
     for _ in range(reps):
         jax.block_until_ready(fn())
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def compile_probe(jitted, *args, **kwargs) -> tuple[float, object]:
+    """Cold-compile probe: ``(compile_s, compiled)`` for a jitted callable.
+
+    Times ``jitted.lower(*args, **kwargs).compile()`` — tracing + XLA
+    compilation, the one-time cost a fresh process pays for this shape —
+    and returns the AOT ``Compiled`` object so the caller can time
+    execution on it directly without paying (or polluting the timing
+    with) a second compile.  The compiled object is called with the
+    *dynamic* arguments only; statics are baked in at lowering.
+    """
+    t0 = time.perf_counter()
+    compiled = jitted.lower(*args, **kwargs).compile()
+    return time.perf_counter() - t0, compiled
 
 
 def live_bytes() -> int:
@@ -107,17 +124,26 @@ def max_rss_bytes() -> int:
 
 def timing_entry(
     grid: str, kernel: str, n: int, num_steps: int, cells: int,
-    wall_us: float, **extra,
+    wall_us: float, block_size: int = 1, compile_s: float | None = None,
+    **extra,
 ) -> dict:
     """One timing entry in the contract schema — the single constructor
     every writer uses, so the per-entry keys cannot drift between files.
-    ``extra`` adds attributable-only fields (e.g. ``max_rss_bytes``)."""
+
+    ``block_size`` is the streaming time-block B the row ran at (1 = the
+    classic single-level scan) and ``compile_s`` the cold
+    ``jit(...).lower().compile()`` wall seconds from ``compile_probe``
+    (``None`` when the writer did not probe — e.g. the warmup call
+    compiled inline).  ``extra`` adds attributable-only fields (e.g.
+    ``max_rss_bytes``)."""
     return {
         "grid": grid, "kernel": kernel, "n": n, "num_steps": num_steps,
         "cells": cells, "wall_us": wall_us,
         "us_per_step": wall_us / num_steps,
         "us_per_step_per_cell": wall_us / (num_steps * cells),
         "peak_device_bytes": peak_bytes(),
+        "block_size": block_size,
+        "compile_s": compile_s,
         **extra,
     }
 
@@ -211,6 +237,8 @@ def write_index(out_dir: str | None = None) -> str:
                     if isinstance(e.get("us_per_step_per_cell"), (int, float))]
         best = min(per_cell, key=lambda e: e["us_per_step_per_cell"],
                    default=None)
+        compiles = [e["compile_s"] for e in entries
+                    if isinstance(e.get("compile_s"), (int, float))]
         index.append({
             "file": fname,
             "benchmark": payload.get("benchmark"),
@@ -225,6 +253,7 @@ def write_index(out_dir: str | None = None) -> str:
             "best_us_per_step_per_cell": (
                 best["us_per_step_per_cell"] if best else None
             ),
+            "max_compile_s": max(compiles) if compiles else None,
         })
     out_path = os.path.join(root, "BENCH_index.json")
     with open(out_path, "w") as fh:

@@ -20,13 +20,21 @@ reports its timings back over stdout.  Four grid families:
   alongside at 10⁴ fleets; plus a 10⁵-step scenario-axis horizon grid
   through the plain ``sweep`` entry point (horizon-independent memory is
   what makes it feasible at all).
+* ``block_sweep`` — the time-blocked kernel's B-sweep: the full-registry
+  grid at S = 10⁵ for B ∈ {1, 8, 32, 128} × synth/materialized, each row
+  compiled cold through ``_bench.compile_probe`` so ``compile_s`` records
+  the one-time cost the block size buys its throughput with.  Synth rows
+  run before materialized rows so their ``max_rss_bytes`` marks stay
+  attributable.
 * ``horizon_synth`` / ``horizon_mat`` — the in-scan-synthesis payoff pair
   at S = 10⁶ steps: the full scenario registry as ``WorkloadSpec`` columns
   synthesized inside the scan (O(W·N) input memory) versus the same specs
   materialized to a (W, S, N) tensor first (the materialization runs
   inside the timed region — it is exactly the producer cost synthesis
-  eliminates).  The synth arm runs *first* so its ``max_rss_bytes`` is
-  attributable.
+  eliminates).  Each arm is measured at B = 1 and again at the best B its
+  own ``block_sweep`` rows measured (resolved worker-side, recorded in the
+  row's ``block_size``).  Within each arm the B = 1 row runs *first* so
+  the blocked row's ``max_rss_bytes`` is comparable against it.
 * ``widefleet`` — the honest memory frontier: a fleet wide enough that the
   materialized S = 10⁶ arrivals tensor exceeds physical host RAM.  The
   materialized arm is **refused** (an entry with ``status`` and
@@ -72,6 +80,9 @@ FRONTIER_FLEETS = 10_000
 MILLION_CELL_FLEETS = 18_000   # 18_000 · 7 policies · 8 scenarios > 10⁶ cells
 HORIZON_STEPS = 100_000
 HORIZON_FRONTIER_STEPS = 1_000_000
+BLOCK_SWEEP_STEPS = 100_000
+BLOCK_SWEEP_SIZES = (1, 8, 32, 128)
+SMOKE_BLOCK_SIZES = (1, 8)
 WIDE_AGENTS = 40_960           # (1, 10⁶, 40960) f32 = 164 GB: exceeds host RAM
 WIDE_STEPS = 1_000_000
 WIDE_PROBE_STEPS = 20_000      # synth probe horizon: memory is O(1) in S,
@@ -83,7 +94,7 @@ FRONTIER_STEPS = 50
 AGENTS = 8
 FRONTIER_AGENTS = 4
 REPS = 3
-WORKER_TIMEOUT_S = 3600
+WORKER_TIMEOUT_S = 7200
 
 
 def _policy_axis_widths(device_count: int) -> tuple[int, ...]:
@@ -104,12 +115,24 @@ def _tasks(device_count: int, max_devices: int, smoke: bool) -> list[dict]:
         # attributable (synth before materialized, both before anything
         # bigger).
         h_steps = 1_000 if smoke else HORIZON_FRONTIER_STEPS
-        tasks.append(dict(grid="horizon_synth_1e6", mode="synth_horizon",
-                          fleets=1, agents=FRONTIER_AGENTS,
-                          num_steps=h_steps, reps=1))
-        tasks.append(dict(grid="horizon_mat_1e6", mode="mat_horizon",
-                          fleets=1, agents=FRONTIER_AGENTS,
-                          num_steps=h_steps, reps=1))
+        b_steps = 500 if smoke else BLOCK_SWEEP_STEPS
+        b_sizes = SMOKE_BLOCK_SIZES if smoke else BLOCK_SWEEP_SIZES
+        # Per arm: the S=1e5 B-sweep, then the S=1e6 row at B=1, then the
+        # S=1e6 row at the best B the sweep measured — synth family first
+        # so every one of its max_rss marks precedes the bigger
+        # materialized buffers.
+        for arm in ("synth", "mat"):
+            mode = f"{arm}_horizon"
+            for b in b_sizes:
+                tasks.append(dict(grid="block_sweep_1e5", mode=mode,
+                                  fleets=1, agents=FRONTIER_AGENTS,
+                                  num_steps=b_steps, reps=1, block_size=b))
+            tasks.append(dict(grid=f"horizon_{arm}_1e6", mode=mode,
+                              fleets=1, agents=FRONTIER_AGENTS,
+                              num_steps=h_steps, reps=1, block_size=1))
+            tasks.append(dict(grid=f"horizon_{arm}_1e6_bestB", mode=mode,
+                              fleets=1, agents=FRONTIER_AGENTS,
+                              num_steps=h_steps, reps=1, block_size="best"))
         wide_n = 2_048 if smoke else WIDE_AGENTS
         tasks.append(dict(grid="widefleet_synth_probe", mode="synth_wide",
                           fleets=1, agents=wide_n,
@@ -202,30 +225,54 @@ def _worker(cfg: dict) -> dict:
             continue
         fleet = synthetic_fleet(n, seed=0)
         if task["mode"] in ("synth_horizon", "mat_horizon"):
-            # The S=10⁶ payoff pair: same full scenario registry, one arm
-            # synthesizing rows inside the scan, the other materializing
-            # the (W, S, N) tensor inside the timed region — the producer
-            # cost synthesis eliminates.
+            # The block-sweep rows and the S=10⁶ payoff pair: same full
+            # scenario registry, one arm synthesizing rows inside the scan,
+            # the other materializing the (W, S, N) tensor inside the timed
+            # region — the producer cost synthesis eliminates.  Every row
+            # compiles cold through ``compile_probe`` and times the AOT
+            # object, so ``compile_s`` is honest and the timed region pays
+            # no hidden recompile.
+            synth = task["mode"] == "synth_horizon"
+            kernel = "streaming_synth" if synth else "streaming_materialized"
+            bsz = task.get("block_size", 1)
+            if bsz == "best":
+                # Resolved worker-side, per arm: the B whose own
+                # ``block_sweep`` row ran fastest earlier in this process.
+                cands = [e for e in entries
+                         if e["grid"] == "block_sweep_1e5"
+                         and e["kernel"] == kernel]
+                bsz = (min(cands, key=lambda e: e["wall_us"])["block_size"]
+                       if cands else 1)
             specs = workload.scenario_specs(
                 workload.synthetic_rates(n, seed=0), num_steps=steps, seed=0
             )
             cells = f * len(names) * len(specs)
-            if task["mode"] == "synth_horizon":
+            if synth:
+                # Grouped static generator dispatch — the same fast path
+                # the public ``sweep`` entry point takes on one device.
                 stack = workload.stack_specs(specs)
-                fn = lambda: sweep_mod._stream_grid_jit(
-                    None, fleet, None, None, stack, config, names, None
+                compile_s, compiled = _bench.compile_probe(
+                    sweep_mod._stream_grid_jit,
+                    None, fleet, None, None, stack, config, names, None,
+                    1, bsz, sweep_mod.synth_gen_groups(stack),
                 )
+                fn = lambda: compiled(None, fleet, None, None, stack)
             else:
-                fn = lambda: sweep_mod._stream_grid_jit(
+                arr = jnp.stack([workload.materialize(s) for s in specs])
+                compile_s, compiled = _bench.compile_probe(
+                    sweep_mod._stream_grid_jit,
+                    arr, fleet, None, None, None, config, names, None,
+                    1, bsz,
+                )
+                del arr
+                fn = lambda: compiled(
                     jnp.stack([workload.materialize(s) for s in specs]),
-                    fleet, None, None, None, config, names, None,
+                    fleet, None, None, None,
                 )
             wall_us = _bench.time_device(fn, reps)
             entries.append(_bench.timing_entry(
-                task["grid"],
-                "streaming_synth" if task["mode"] == "synth_horizon"
-                else "streaming_materialized",
-                n, steps, cells, wall_us,
+                task["grid"], kernel, n, steps, cells, wall_us,
+                block_size=bsz, compile_s=compile_s,
                 device_count=cfg["device_count"], host_cpus=os.cpu_count(),
                 fleets=f, max_rss_bytes=_bench.max_rss_bytes(),
                 arrivals_bytes_if_materialized=len(specs) * steps * n * 4,
@@ -242,7 +289,8 @@ def _worker(cfg: dict) -> dict:
             sub = names[:1]
             cells = f * len(sub)
             fn = lambda: sweep_mod._stream_grid_jit(
-                None, fleet, None, None, stack, config, sub, None
+                None, fleet, None, None, stack, config, sub, None,
+                gen_groups=sweep_mod.synth_gen_groups(stack),
             )
             wall_us = _bench.time_device(fn, task["reps"])
             entries.append(_bench.timing_entry(
@@ -428,10 +476,9 @@ def run(out_dir: str | None = None) -> list[str]:
             f"scaling_frontier/frontier_10k_1d,{rep:.1f},"
             f"slowdown_vs_2d={rep / f10k:.2f}x"
         )
-    synth = next((e for e in entries if e["kernel"] == "streaming_synth"
-                  and e["grid"].startswith("horizon_synth")), None)
-    mat = next((e for e in entries if e["kernel"] == "streaming_materialized"
-                and e["grid"].startswith("horizon_mat")), None)
+    synth = next((e for e in entries
+                  if e["grid"] == "horizon_synth_1e6"), None)
+    mat = next((e for e in entries if e["grid"] == "horizon_mat_1e6"), None)
     if synth and mat:
         out.append(
             f"scaling_frontier/horizon_synth,{synth['wall_us']:.1f},"
@@ -441,6 +488,30 @@ def run(out_dir: str | None = None) -> list[str]:
             f"scaling_frontier/horizon_mat,{mat['wall_us']:.1f},"
             f"wall_vs_synth={mat['wall_us'] / synth['wall_us']:.2f}x;"
             f"rss={mat.get('max_rss_bytes')}"
+        )
+    for e in sorted((e for e in entries if e["grid"] == "block_sweep_1e5"),
+                    key=lambda e: (e["kernel"], e["block_size"])):
+        arm = e["kernel"].removeprefix("streaming_")
+        out.append(
+            f"scaling_frontier/block_{arm}_B{e['block_size']},"
+            f"{e['wall_us']:.1f},compile_s={e['compile_s']:.2f}"
+        )
+    best_s = next((e for e in entries
+                   if e["grid"] == "horizon_synth_1e6_bestB"), None)
+    best_m = next((e for e in entries
+                   if e["grid"] == "horizon_mat_1e6_bestB"), None)
+    if best_s and synth:
+        out.append(
+            f"scaling_frontier/horizon_synth_bestB,{best_s['wall_us']:.1f},"
+            f"B={best_s['block_size']};"
+            f"speedup_vs_B1={synth['wall_us'] / best_s['wall_us']:.2f}x;"
+            f"rss={best_s.get('max_rss_bytes')}"
+        )
+    if best_s and best_m:
+        out.append(
+            f"scaling_frontier/horizon_mat_bestB,{best_m['wall_us']:.1f},"
+            f"B={best_m['block_size']};"
+            f"mat_vs_synth={best_m['wall_us'] / best_s['wall_us']:.2f}x"
         )
     refusal = next((e for e in entries if e.get("status")), None)
     if refusal:

@@ -147,6 +147,49 @@ def water_filling(
     return jnp.where(total > 0, g, jnp.zeros_like(g))
 
 
+def sqrt_demand(
+    queue: jnp.ndarray,
+    lam: jnp.ndarray,
+    base_throughput: jnp.ndarray,
+    min_gpu: jnp.ndarray,
+    g_total: float = 1.0,
+) -> jnp.ndarray:
+    """Square-root fair share: g_i ∝ √((q_i + lam_i)/T_i).
+
+    The sublinear weight is the classic square-root rule (cf. √N staffing):
+    heavy agents still get more GPU, but the concave weighting shields
+    light agents from starvation during skewed bursts — a cheap middle
+    ground between ``static_equal`` and ``water_filling``.  Floors and
+    capacity normalization follow Algorithm 1, keyed on the *raw* pressure
+    (same busy set as water-filling).
+    """
+    pressure = (queue + lam) / jnp.maximum(base_throughput, _EPS)
+    weight = jnp.sqrt(pressure)
+    total = weight.sum()
+    prop = weight / jnp.maximum(total, _EPS) * g_total
+    g = jnp.maximum(jnp.where(pressure > 0, min_gpu, 0.0), prop)
+    g = _normalize_capacity(g, g_total)
+    return jnp.where(total > 0, g, jnp.zeros_like(g))
+
+
+def ema_water_filling(
+    queue: jnp.ndarray,
+    lam_ema: jnp.ndarray,
+    base_throughput: jnp.ndarray,
+    min_gpu: jnp.ndarray,
+    g_total: float = 1.0,
+) -> jnp.ndarray:
+    """Latency-EMA-weighted water-filling: equalize the *forecast* drain
+    time (q_i + ema_i)/(g_i·T_i) instead of the instantaneous one.
+
+    Same fixed point as ``water_filling`` under steady load, but the EMA
+    smoothing keeps allocations from thrashing on bursty arrivals — the
+    predictive counterpart of water-filling, exactly as ``predictive`` is
+    the EMA counterpart of ``adaptive``.
+    """
+    return water_filling(queue, lam_ema, base_throughput, min_gpu, g_total)
+
+
 def _committed(x: jnp.ndarray) -> jnp.ndarray:
     """Pin ``x`` to its rounded float32 value against FMA contraction.
 
@@ -477,6 +520,22 @@ def _objective_descent_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
     return objective_descent(
         queue * m, lam_obs * m, fleet.base_throughput, fleet.min_gpu * m,
         fleet.priority, g_total, active=m,
+    ) * m
+
+
+@register_policy("sqrt_demand")
+def _sqrt_demand_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    m = fleet.active
+    return sqrt_demand(
+        queue * m, lam_obs * m, fleet.base_throughput, fleet.min_gpu * m, g_total
+    ) * m
+
+
+@register_policy("ema_water_filling")
+def _ema_water_filling_entry(t, lam_obs, lam_ema, queue, fleet, g_total):
+    m = fleet.active
+    return ema_water_filling(
+        queue * m, lam_ema * m, fleet.base_throughput, fleet.min_gpu * m, g_total
     ) * m
 
 

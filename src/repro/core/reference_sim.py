@@ -33,7 +33,9 @@ from repro.core.routing import Workflow
 _EPS = 1e-9
 
 
-def synthesize_loop(spec, num_steps: int | None = None) -> np.ndarray:
+def synthesize_loop(
+    spec, num_steps: int | None = None, block_size: int = 1
+) -> np.ndarray:
     """Eager python-loop twin of ``workload.materialize``.
 
     Walks the registered generator one step at a time — ``workload_step``
@@ -43,16 +45,34 @@ def synthesize_loop(spec, num_steps: int | None = None) -> np.ndarray:
     functions) is cross-validated by a second control-flow path, exactly
     like this module's queue-dynamics loop cross-validates the simulator
     scan.  Returns the (S, N) arrival tensor as float64 rows.
+
+    ``block_size`` > 1 is the eager twin of the *time-blocked* kernel: the
+    horizon is walked ⌈S/B⌉ blocks at a time through ``workload.step_block``
+    — a python outer loop in place of the kernel's outer scan, the block
+    state threaded by hand, and a naturally ragged tail block (no masking
+    needed eagerly) — so block decomposition is cross-validated by a second
+    control-flow frame too.  Every B yields identical rows.
     """
     from repro.core import workload as workload_mod
 
     steps = int(spec.num_steps if num_steps is None else num_steps)
+    b = int(block_size)
+    if b < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
     state = workload_mod.workload_init(spec)
     rows = []
-    for t in range(steps):
-        lam, state = workload_mod.workload_step(spec, state, t)
-        rows.append(np.asarray(lam, np.float64))
-    return np.stack(rows)
+    if b == 1:
+        for t in range(steps):
+            lam, state = workload_mod.workload_step(spec, state, t)
+            rows.append(np.asarray(lam, np.float64))
+        return np.stack(rows)
+    import jax.numpy as jnp
+
+    for t0 in range(0, steps, b):
+        ts = jnp.arange(t0, min(t0 + b, steps), dtype=jnp.int32)
+        lam_rows, state = workload_mod.step_block(spec, state, ts)
+        rows.append(np.asarray(lam_rows, np.float64))
+    return np.concatenate(rows)
 
 
 # Every registry entry the oracle reproduces; kept in sync with
@@ -65,6 +85,8 @@ SUPPORTED_POLICIES = (
     "predictive",
     "throughput_greedy",
     "objective_descent",
+    "sqrt_demand",
+    "ema_water_filling",
 )
 
 
@@ -80,6 +102,18 @@ def _adaptive(src: np.ndarray, R: np.ndarray, P: np.ndarray, g_total: float) -> 
     if d.sum() <= 0:
         return np.zeros_like(src)
     g = np.maximum(R, d / d.sum() * g_total)
+    return _normalize(g, g_total)
+
+
+def _water_fill(pressure: np.ndarray, R: np.ndarray, g_total: float) -> np.ndarray:
+    """Shared water-filling shape: proportional-to-pressure with a busy
+    min-GPU floor, used by ``water_filling`` (pressure from observed
+    intake), ``ema_water_filling`` (pressure from the EMA forecast) and —
+    through a sqrt of the pressure — ``sqrt_demand``."""
+    if pressure.sum() <= 0:
+        return np.zeros_like(pressure)
+    prop = pressure / pressure.sum() * g_total
+    g = np.maximum(np.where(pressure > 0, R, 0.0), prop)
     return _normalize(g, g_total)
 
 
@@ -277,13 +311,13 @@ def simulate_numpy(
         elif policy in ("adaptive", "predictive"):
             g = _adaptive(lam if policy == "adaptive" else ema, R, P, g_total_t)
         elif policy == "water_filling":
-            pressure = (q + lam) / np.maximum(T, _EPS)
-            if pressure.sum() <= 0:
-                g = np.zeros(n)
-            else:
-                prop = pressure / pressure.sum() * g_total_t
-                g = np.maximum(np.where(pressure > 0, R, 0.0), prop)
-                g = _normalize(g, g_total_t)
+            g = _water_fill((q + lam) / np.maximum(T, _EPS), R, g_total_t)
+        elif policy == "ema_water_filling":
+            g = _water_fill((q + ema) / np.maximum(T, _EPS), R, g_total_t)
+        elif policy == "sqrt_demand":
+            g = _water_fill(
+                np.sqrt((q + lam) / np.maximum(T, _EPS)), R, g_total_t
+            )
         elif policy == "throughput_greedy":
             g = _throughput_greedy(q, lam, T, R, g_total_t)
         else:  # objective_descent

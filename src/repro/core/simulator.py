@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import NamedTuple, Sequence
 
 import jax
@@ -72,6 +73,27 @@ from repro.core.capacity import CapacityConfig, billing_cost
 from repro.core.routing import Workflow, check_workflow
 
 _EPS = 1e-9
+
+# Env default for the streaming kernel's time-block size (see
+# ``resolve_block_size`` / ``simulate_stream_core(block_size=)``).
+BLOCK_ENV = "REPRO_SWEEP_BLOCK"
+
+
+def resolve_block_size(block_size: int | None = None) -> int:
+    """Resolve the streaming time-block size B to a concrete python int.
+
+    Explicit ``block_size`` wins; ``None`` falls back to the
+    ``REPRO_SWEEP_BLOCK`` env var, then to 1 (the classic single-level
+    scan).  B is a trace constant — it sizes the inner unrolled scan — so
+    it must be resolved *before* jit, never traced.
+    """
+    if block_size is None:
+        raw = os.environ.get(BLOCK_ENV, "").strip()
+        block_size = int(raw) if raw else 1
+    b = int(block_size)
+    if b < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    return b
 
 
 def __getattr__(attr: str):
@@ -389,6 +411,8 @@ def simulate_stream_core(
     workload_spec=None,
     num_policy_blocks: int = 1,
     policy_block: jnp.ndarray | None = None,
+    block_size: int | None = None,
+    gen_name: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused streaming scan: every named policy's trajectory AND its metric
     reductions in ONE pass, materializing no per-step traces.
@@ -422,6 +446,30 @@ def simulate_stream_core(
     ``lax.axis_index("policy")``).  Each block still gets the O(P) unrolled
     dispatch via ``allocator.policy_stack_blocks``; state/metric rows shrink
     to P/blocks per device.
+
+    **Time blocking** (``block_size`` > 1, env ``REPRO_SWEEP_BLOCK``): the
+    scan becomes two-level — an outer ``lax.scan`` over ⌈S/B⌉ blocks whose
+    body synthesizes a whole (B, N) arrival block in one
+    ``workload.step_block`` call (one generator dispatch per block instead
+    of per step, and one *batched* RNG draw per block for the expensive
+    samplers) and runs B physics/dispatch steps through an inner rolled
+    scan.  Unrolling that inner scan was measured a net loss on XLA CPU —
+    ~1.7× slower execution and far longer compiles than the rolled loop —
+    so blocking's payoff is entirely in the amortized synthesis, not in
+    loop unrolling.  A non-divisible horizon is handled by a masked tail
+    block: steps with ``t >= S`` keep the previous carry element-wise, so
+    they change nothing.  ``block_size=1`` routes to the original
+    single-level scan verbatim, and every block size yields bit-identical
+    metrics (tests/test_streaming.py) — B trades compile time for step
+    throughput, never results.  Peak memory per cell grows to O(B·N);
+    both ends of the scan stay horizon-free.
+
+    ``gen_name`` statically names the spec's generator when the caller
+    knows it at trace time (the grouped-dispatch sweep path,
+    ``sweep.synth_gen_groups``): synthesis then calls that generator
+    directly instead of through ``lax.switch``, whose vmapped
+    evaluate-all-branches lowering makes every scenario column pay every
+    registered generator.  Results are bit-identical either way.
 
     Physics (``_queue_step``), EMA seeding, the autoscaler
     (``capacity_step``, vmapped over the policy rows — each policy's queue
@@ -470,18 +518,11 @@ def simulate_stream_core(
             )
         return alloc.policy_stack(t, lam, lam_ema, queue, fleet, g_total_t, names)
 
-    def step(carry, inp):
+    def step_body(carry, t, lam_exo):
+        # One streaming step on the workload-state-free carry:
+        # (queue, lam_ema, endo, acc[, cstate]).
         queue, lam_ema, endo, acc = carry[:4]
         rest = carry[4:]
-        if synth:
-            t = inp
-            lam_row, wstate = workload_mod.workload_step(
-                workload_spec, rest[0], t
-            )
-            lam_exo = lam_row * gate
-            rest = (wstate,) + rest[1:]
-        else:
-            t, lam_exo = inp
         lam = lam_exo + endo            # (P, N) total intake per policy row
         lam_ema = jnp.where(
             t > 0, alloc.ema_forecast(lam_ema, lam, config.ema_alpha), lam_ema
@@ -504,17 +545,29 @@ def simulate_stream_core(
             acc, fleet.active, g, served, new_queue, latency, completed,
             warm_t, pending_t,
         )
-        return (new_queue, lam_ema, new_endo, acc) + rest, None
+        return (new_queue, lam_ema, new_endo, acc) + rest
+
+    def step(carry, inp):
+        # Single-level (block_size=1) scan body: per-step synthesis inline.
+        if synth:
+            t = inp
+            lam_row, wstate = workload_mod.workload_step(
+                workload_spec, carry[4], t, gen=gen_name
+            )
+            out = step_body(carry[:4] + carry[5:], t, lam_row * gate)
+            return out[:4] + (wstate,) + out[4:], None
+        t, lam_exo = inp
+        return step_body(carry, t, lam_exo), None
 
     if synth:
         num_steps = workload_spec.num_steps
-        wstate0 = workload_mod.workload_init(workload_spec)
+        wstate0 = workload_mod.workload_init(workload_spec, gen=gen_name)
         # EMA seed = the very row the scan body will synthesize at t=0
         # (same step function, same fold — bit-identical to arrivals[0]
         # of the materialized tensor, gated the same way).
         lam0 = (
             workload_mod.workload_step(
-                workload_spec, wstate0, jnp.asarray(0, jnp.int32)
+                workload_spec, wstate0, jnp.asarray(0, jnp.int32), gen=gen_name
             )[0]
             * gate
         )
@@ -535,7 +588,96 @@ def simulate_stream_core(
             lambda x: jnp.broadcast_to(x, (p,) + x.shape),
             cap_mod.init_capacity_state(config.g_total),
         ),)
-    carry, _ = jax.lax.scan(step, init, ts if synth else (ts, arrivals))
+    bsz = resolve_block_size(block_size)
+    if bsz == 1:
+        carry, _ = jax.lax.scan(step, init, ts if synth else (ts, arrivals))
+    else:
+        # Two-level blocked scan: the outer scan walks the ⌊S/B⌋ *full*
+        # blocks with a mask-free inner scan (the hot path); a
+        # non-divisible horizon finishes in one masked tail block below.
+        # Both inner scans stay ROLLED: unrolling the full physics body was
+        # measured a straight loss on XLA CPU (~1.7× slower at B=128, with
+        # far longer compiles — and the tail's per-step where-gate builds
+        # select chains the simplifier degenerates on when unrolled).  The
+        # block's payoff is the batched per-block synthesis in
+        # workload.step_block, not loop unrolling.
+        full = num_steps // bsz
+        rem = num_steps - full * bsz
+        unroll = 1
+
+        def inner_step(carry, inp):
+            t, lam_exo = inp
+            return step_body(carry, t, lam_exo), None
+
+        def tail_step(carry, inp):
+            # Masked tail block: steps past the horizon keep the old carry
+            # element-wise (where(True, new, old) == new exactly, so valid
+            # steps are untouched by the gate).
+            t, lam_exo = inp
+            new_carry = step_body(carry, t, lam_exo)
+            valid = t < num_steps
+            return jax.tree_util.tree_map(
+                lambda new, old: jnp.where(valid, new, old), new_carry, carry
+            ), None
+
+        def split_wstate(carry):
+            # (queue, ema, endo, acc[, wstate][, cstate]) -> workload-free
+            # carry for the inner scans + the wstate to thread at block level.
+            if synth:
+                return carry[:4] + carry[5:], carry[4]
+            return carry, None
+
+        def join_wstate(inner, wstate):
+            if synth:
+                return inner[:4] + (wstate,) + inner[4:]
+            return inner
+
+        def run_block(carry, ts_blk, lam_blk, scan_step, unroll):
+            inner, wstate = split_wstate(carry)
+            if synth:
+                lam_blk, wstate = workload_mod.step_block(
+                    workload_spec, wstate, ts_blk, gen=gen_name
+                )
+                lam_blk = lam_blk * gate
+            inner, _ = jax.lax.scan(
+                scan_step, inner, (ts_blk, lam_blk), unroll=unroll
+            )
+            return join_wstate(inner, wstate)
+
+        if synth:
+            arr_blocks = None
+            xs = jnp.arange(full, dtype=ts.dtype) * bsz  # block start t0
+        else:
+            arr_blocks = arrivals[: full * bsz].reshape(
+                (full, bsz) + arrivals.shape[1:]
+            )
+            xs = (
+                jnp.arange(full * bsz, dtype=ts.dtype).reshape(full, bsz),
+                arr_blocks,
+            )
+
+        def block_step(carry, inp):
+            if synth:
+                ts_blk = inp + jnp.arange(bsz, dtype=inp.dtype)
+                lam_blk = None
+            else:
+                ts_blk, lam_blk = inp
+            return run_block(carry, ts_blk, lam_blk, inner_step, unroll), None
+
+        carry = init
+        if full:
+            carry, _ = jax.lax.scan(block_step, carry, xs)
+        if rem:
+            ts_tail = full * bsz + jnp.arange(bsz, dtype=ts.dtype)
+            if synth:
+                lam_tail = None  # synthesized inside run_block
+            else:
+                pad = bsz - rem
+                lam_tail = jnp.concatenate(
+                    [arrivals[full * bsz:],
+                     jnp.zeros((pad,) + arrivals.shape[1:], arrivals.dtype)]
+                )
+            carry = run_block(carry, ts_tail, lam_tail, tail_step, 1)
     acc = carry[3]
     return jax.vmap(
         lambda a: finalize_metrics(

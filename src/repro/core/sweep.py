@@ -99,6 +99,7 @@ from repro.core.simulator import (
     SimConfig,
     SimSummary,
     SimTrace,
+    resolve_block_size,
     simulate_core,
     simulate_stream_core,
     trace_metrics,
@@ -374,6 +375,39 @@ def _grid_jit(
     )
 
 
+def synth_gen_groups(wspec) -> tuple | None:
+    """Partition a stacked spec's scenario axis by generator, statically.
+
+    Returns ``((gen_name, (idx, ...)), ...)`` covering every scenario
+    column, or ``None`` when grouping does not apply (no spec, or a
+    fleet-batched stack whose scenario columns change generator across
+    fleets).  Must be called *outside* jit — it reads concrete ``gen_id``
+    values.
+
+    The payoff: ``_stream_grid`` vmaps each group separately with the
+    generator name passed statically, so synthesis dispatches directly
+    instead of through the vmapped ``lax.switch``, whose
+    evaluate-all-branches lowering makes every scenario column pay every
+    registered generator per step — the poisson sampler alone was measured
+    at ~93% of all-branches block synthesis cost while typically only one
+    column actually runs it.
+    """
+    if wspec is None:
+        return None
+    gids = np.asarray(wspec.gen_id)
+    if gids.ndim == 2:
+        # (F, W) fleet-batched stack: grouping needs one generator per
+        # scenario column across every fleet row.
+        if not (gids == gids[0]).all():
+            return None
+        gids = gids[0]
+    names = workload.workload_names()
+    groups: dict[int, list[int]] = {}
+    for i, gid in enumerate(gids.tolist()):
+        groups.setdefault(int(gid), []).append(i)
+    return tuple((names[gid], tuple(idx)) for gid, idx in groups.items())
+
+
 def _stream_grid(
     arrivals: jnp.ndarray | None,  # (W, S, N), or (F, W, S, N) when batch_axis="fleet"
     fleet: Fleet,            # leaves (N,), or (F, N) when batch_axis="fleet"
@@ -384,6 +418,8 @@ def _stream_grid(
     names: tuple = (),
     batch_axis: str | None = None,
     num_policy_blocks: int = 1,
+    block_size: int = 1,
+    gen_groups: tuple | None = None,
 ):
     """The streaming (policy × scenario) grid kernel — the default for
     ``keep_traces=False`` sweeps.
@@ -404,6 +440,13 @@ def _stream_grid(
     3D mesh and computes only this device's policy block, selected by
     ``lax.axis_index("policy")`` (``allocator.policy_stack_blocks``).
 
+    ``gen_groups`` (static; build with ``synth_gen_groups``) partitions the
+    scenario axis by generator so each group's synthesis dispatches its
+    generator *directly* instead of through the vmapped ``lax.switch`` —
+    the single-device synth fast path.  The sharded placement keeps the
+    switch (``gen_groups=None``): ``shard_map`` needs one uniform program
+    whatever scenario columns land on a device.
+
     This function is deliberately unjitted: ``_stream_grid_jit`` wraps it
     for the single-device path and ``_stream_grid_sharded`` runs the exact
     same body per device block under ``shard_map`` — one kernel, two
@@ -414,19 +457,45 @@ def _stream_grid(
         if num_policy_blocks > 1 else None
     )
 
-    def cell(arr, fl, wf, cp, sp):
+    def cell(arr, fl, wf, cp, sp, gen_name=None):
         return simulate_stream_core(
             arr, fl, config, names, wf, cp, workload_spec=sp,
             num_policy_blocks=num_policy_blocks, policy_block=block,
+            block_size=block_size, gen_name=gen_name,
         )
 
     a_ax = None if arrivals is None else 0
     s_ax = None if wspec is None else 0
+
     # out_axes=1: the per-cell policy axis stays leading, scenarios second,
     # matching the trace kernel's (…, P, W, ·) layout.
-    over_scen = jax.vmap(
-        cell, in_axes=(a_ax, None, None, None, s_ax), out_axes=1
-    )
+    def over_scen(arr, fl, wf, cp, sp):
+        if gen_groups is None or sp is None:
+            return jax.vmap(
+                cell, in_axes=(a_ax, None, None, None, s_ax), out_axes=1
+            )(arr, fl, wf, cp, sp)
+        # Grouped static dispatch (``synth_gen_groups``): one vmap per
+        # generator group, each synthesizing through its generator
+        # directly — no vmapped ``lax.switch``, so no
+        # evaluate-all-branches blowup where every scenario column pays
+        # every registered sampler.  Outputs are reassembled in the
+        # caller's scenario order by a static inverse permutation;
+        # per-cell results are bit-identical to the switch path.
+        outs, order = [], []
+        for gname, idx in gen_groups:
+            sub = jax.tree_util.tree_map(
+                lambda x, i=np.asarray(idx): x[i], sp
+            )
+            outs.append(jax.vmap(
+                functools.partial(cell, gen_name=gname),
+                in_axes=(None, None, None, None, 0), out_axes=1,
+            )(None, fl, wf, cp, sub))
+            order.extend(idx)
+        inv = np.argsort(np.asarray(order))
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=1)[:, inv], *outs
+        )
+
     if batch_axis is None:
         return over_scen(arrivals, fleet, workflow, capacity, wspec)
     outer_axes = {
@@ -441,14 +510,18 @@ def _stream_grid(
 
 _stream_grid_jit = functools.partial(
     jax.jit,
-    static_argnames=("config", "names", "batch_axis", "num_policy_blocks"),
+    static_argnames=(
+        "config", "names", "batch_axis", "num_policy_blocks", "block_size",
+        "gen_groups",
+    ),
 )(_stream_grid)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "mesh", "config", "names", "batch_axis", "num_policy_blocks"
+        "mesh", "config", "names", "batch_axis", "num_policy_blocks",
+        "block_size",
     ),
     donate_argnums=(0,),
 )
@@ -463,6 +536,7 @@ def _stream_grid_sharded(
     names: tuple,
     batch_axis: str | None,
     num_policy_blocks: int = 1,
+    block_size: int = 1,
 ):
     """The sharded streaming grid: ``shard_map`` of ``_stream_grid`` over
     the ``("data", "grid", "policy")`` mesh.
@@ -492,7 +566,7 @@ def _stream_grid_sharded(
     )
     body = functools.partial(
         _stream_grid, config=config, names=names, batch_axis=batch_axis,
-        num_policy_blocks=num_policy_blocks,
+        num_policy_blocks=num_policy_blocks, block_size=block_size,
     )
     return shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
@@ -510,6 +584,7 @@ def _run_stream_sharded(
     batch_axis: str | None,
     wspec=None,
     policy_devices: int = 1,
+    block_size: int = 1,
 ):
     """Pad the sharded axes to mesh divisibility, run the sharded streaming
     kernel, strip the padding host-side.
@@ -546,7 +621,7 @@ def _run_stream_sharded(
         pad([(0, dd * dg)])
         out = _stream_grid_sharded(
             arrivals, fleet, workflow, capacity, wspec, mesh, config, names,
-            batch_axis, dp,
+            batch_axis, dp, block_size,
         )
         return tuple(x[:p, :w] for x in out)
     if batch_axis == "fleet":
@@ -567,7 +642,7 @@ def _run_stream_sharded(
         capacity = sharding.pad_tree_axis(capacity, 0, dd)
     out = _stream_grid_sharded(
         arrivals, fleet, workflow, capacity, wspec, mesh, config, names,
-        batch_axis, dp,
+        batch_axis, dp, block_size,
     )
     return tuple(x[:b, :p, :w] for x in out)
 
@@ -586,6 +661,7 @@ def _run_grid(
     batch_axis: str | None,
     shard: bool | None = None,
     wspec=None,
+    block_size: int | None = None,
 ):
     """Pick the kernel and placement for one sweep call: streaming by
     default — sharded over the ``("data", "grid", "policy")`` mesh whenever
@@ -614,15 +690,19 @@ def _run_grid(
         )
     sharded = sharding.should_shard(shard)
     if streamed:
+        # Resolved here — before any jit boundary — so the env default is
+        # read exactly once per call and B enters the kernels static.
+        bsz = resolve_block_size(block_size)
         if sharded:
             return _run_stream_sharded(
                 arrivals, fleet, workflow, capacity, config, names,
                 batch_axis, wspec=wspec,
                 policy_devices=sharding.policy_mesh_devices(shard),
+                block_size=bsz,
             )
         return _stream_grid_jit(
             arrivals, fleet, workflow, capacity, wspec, config, names,
-            batch_axis,
+            batch_axis, block_size=bsz, gen_groups=synth_gen_groups(wspec),
         )
     if sharded and batch_axis == "fleet":
         # The parity oracle keeps the pre-shard_map layout-hint path: pad
@@ -721,6 +801,7 @@ def sweep(
     return_arrays: bool = False,
     shard: bool | None = None,
     synthesize: bool | None = None,
+    block_size: int | None = None,
 ) -> SweepResult | tuple:
     """Evaluate ``policies`` (default: the whole registry) × ``scenarios``.
 
@@ -748,6 +829,14 @@ def sweep(
     or any trace-oracle run) materializes the same specs host-side via the
     same registered step functions — bit-for-bit identical results, the
     synthesis parity oracle.
+
+    ``block_size`` (or ``REPRO_SWEEP_BLOCK``; default 1) sets the
+    streaming kernel's time-block B: the scan walks the horizon in
+    B-step blocks — one workload dispatch and one capped-unroll inner
+    scan per block — identical results at every B, trading one-time
+    compile cost for steady-state throughput (see
+    ``simulate_stream_core``).  The same knob threads through every
+    sweep entry point, sharded or not.
     """
     fleet.validate()
     if capacity is not None:
@@ -761,7 +850,7 @@ def sweep(
 
     out = _run_grid(pids, arrivals, fleet, None, capacity, config,
                        reg_names, names, keep_traces, stream, None, shard,
-                       wspec=wspec)
+                       wspec=wspec, block_size=block_size)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -792,6 +881,7 @@ def sweep_fleets(
     stream: bool | None = None,
     return_arrays: bool = False,
     synthesize: bool | None = None,
+    block_size: int | None = None,
 ) -> SweepResult | tuple:
     """One jitted (fleet × policy × scenario) grid over heterogeneous fleets.
 
@@ -874,7 +964,7 @@ def sweep_fleets(
 
     out = _run_grid(pids, arrivals, stacked, None, None, config,
                        reg_names, names, keep_traces, stream, "fleet", shard,
-                       wspec=wspec)
+                       wspec=wspec, block_size=block_size)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -925,6 +1015,7 @@ def sweep_workflows(
     return_arrays: bool = False,
     shard: bool | None = None,
     synthesize: bool | None = None,
+    block_size: int | None = None,
 ) -> SweepResult | tuple:
     """One jitted (workflow × policy × scenario) grid over one fleet.
 
@@ -970,7 +1061,7 @@ def sweep_workflows(
 
     out = _run_grid(pids, arrivals, fleet, stacked_wf, None, config,
                        reg_names, names, keep_traces, stream, "workflow",
-                       shard, wspec=wspec)
+                       shard, wspec=wspec, block_size=block_size)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -1041,6 +1132,7 @@ def sweep_capacity(
     return_arrays: bool = False,
     shard: bool | None = None,
     synthesize: bool | None = None,
+    block_size: int | None = None,
 ) -> SweepResult | tuple:
     """One jitted (capacity × policy × scenario) grid over one fleet.
 
@@ -1086,7 +1178,7 @@ def sweep_capacity(
 
     out = _run_grid(pids, arrivals, fleet, None, stacked_cap, config,
                        reg_names, names, keep_traces, stream, "capacity",
-                       shard, wspec=wspec)
+                       shard, wspec=wspec, block_size=block_size)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])

@@ -232,6 +232,7 @@ _INIT_FOLD = 0x7FFFFFFF
 class _WorkloadGen(NamedTuple):
     step: Callable  # (t, rates, knobs, state, key_t) -> (lam (N,), state (N,))
     init: Callable  # (rates, knobs, key_init) -> state (N,)
+    block: Callable  # (ts, rates, knobs, state, keys, unroll) -> (rows (B,N), state)
 
 
 _WORKLOADS: dict[str, _WorkloadGen] = {}
@@ -241,7 +242,52 @@ def _zeros_init(rates, knobs, key):
     return jnp.zeros_like(rates)
 
 
-def register_workload(name: str, init: Callable | None = None):
+def _scan_block(step: Callable) -> Callable:
+    """Generic block synthesis: scan the step function over the block.
+
+    The bit-identity *reference* — B sequential ``step`` calls with the
+    per-t keys.  Every specialized block implementation below must match
+    this exactly; it remains the default for generators registered without
+    one.
+    """
+
+    def block(ts, rates, knobs, state, keys, unroll):
+        def body(st, xs):
+            t, key_t = xs
+            lam, st = step(t, rates, knobs, st, key_t)
+            return st, lam
+
+        new_state, rows = jax.lax.scan(body, state, (ts, keys), unroll=unroll)
+        return rows, new_state
+
+    return block
+
+
+def _batched_block(step: Callable) -> Callable:
+    """Block synthesis for *stateless* generators: one vmapped call.
+
+    A stateless step returns its state untouched, so the whole (B, N) block
+    is a single batched evaluation over ``(ts, keys)`` — one RNG kernel per
+    block instead of B sequential ones.  ``vmap`` of a deterministic
+    function of ``(t, key_t)`` equals stacking the B scalar calls, so the
+    rows are bit-identical to the scanned reference.
+    """
+
+    def block(ts, rates, knobs, state, keys, unroll):
+        rows, _ = jax.vmap(lambda t, k: step(t, rates, knobs, state, k))(
+            ts, keys
+        )
+        return rows, state
+
+    return block
+
+
+def register_workload(
+    name: str,
+    init: Callable | None = None,
+    block: Callable | None = None,
+    stateless: bool = False,
+):
     """Register a per-step arrival generator under ``name``.
 
     ``fn(t, rates, knobs, state, key_t) -> (lam, state)`` computes step t's
@@ -252,12 +298,29 @@ def register_workload(name: str, init: Callable | None = None):
     draws the t=0 state (default: zeros) from ``fold_in(spec.key,
     _INIT_FOLD)``.  Registration order defines ``workload_id`` — the
     ``lax.switch`` branch index, exactly like the policy registry.
+
+    ``stateless=True`` marks a generator whose step ignores and passes
+    through ``state``: its ``step_block`` branch becomes one vmapped batched
+    call (``_batched_block``).  Stateful generators may register an explicit
+    ``block`` that presamples their draws in batch and scans only the cheap
+    state recurrence; omitting both falls back to the scanned reference
+    (``_scan_block``).  Whatever the route, a block must be bit-identical to
+    B sequential step calls — the parity property in
+    tests/test_workload_synthesis.py enforces it per generator.
     """
 
     def deco(fn: Callable) -> Callable:
         if name in _WORKLOADS:
             raise ValueError(f"workload generator {name!r} already registered")
-        _WORKLOADS[name] = _WorkloadGen(fn, _zeros_init if init is None else init)
+        if stateless:
+            if block is not None:
+                raise ValueError("stateless generators derive their block")
+            blk = _batched_block(fn)
+        else:
+            blk = _scan_block(fn) if block is None else block
+        _WORKLOADS[name] = _WorkloadGen(
+            fn, _zeros_init if init is None else init, blk
+        )
         return fn
 
     return deco
@@ -346,11 +409,20 @@ def make_spec(
     )
 
 
-def workload_init(spec: WorkloadSpec) -> jnp.ndarray:
-    """The generator's t=0 carry state, drawn from the reserved init fold."""
+def workload_init(spec: WorkloadSpec, gen: str | None = None) -> jnp.ndarray:
+    """The generator's t=0 carry state, drawn from the reserved init fold.
+
+    ``gen`` names the generator *statically* when the caller knows it at
+    trace time (the grouped-dispatch sweep path): the ``lax.switch`` is
+    replaced by a direct call, so a vmapped caller does not lower every
+    registered branch.  The dispatched function is identical either way —
+    the draw is bit-for-bit the same.
+    """
     key_init = jax.random.fold_in(
         jax.random.wrap_key_data(spec.key_data), _INIT_FOLD
     )
+    if gen is not None:
+        return _WORKLOADS[gen].init(spec.rates, spec.knobs, key_init)
     return jax.lax.switch(
         spec.gen_id,
         [g.init for g in _WORKLOADS.values()],
@@ -359,20 +431,85 @@ def workload_init(spec: WorkloadSpec) -> jnp.ndarray:
 
 
 def workload_step(
-    spec: WorkloadSpec, state: jnp.ndarray, t: jnp.ndarray
+    spec: WorkloadSpec,
+    state: jnp.ndarray,
+    t: jnp.ndarray,
+    gen: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Step t's (N,) arrival row + next carry state, by switch dispatch.
 
     Pure in t: the key is ``fold_in(spec.key, t)``, so the same (spec,
     state, t) triple always yields the same draw — inside a scan, under
-    vmap, or called eagerly (the oracle's python loop).
+    vmap, or called eagerly (the oracle's python loop).  A static ``gen``
+    bypasses the switch (see ``workload_init``): under ``vmap`` the switch
+    lowers to evaluate-all-branches-and-select, which makes every scenario
+    column pay every registered generator — the expensive ones (poisson's
+    iterative sampler) dominate whole sweeps.  Same function, same key,
+    same bits; only the dispatch differs.
     """
     key_t = jax.random.fold_in(jax.random.wrap_key_data(spec.key_data), t)
+    if gen is not None:
+        return _WORKLOADS[gen].step(t, spec.rates, spec.knobs, state, key_t)
     return jax.lax.switch(
         spec.gen_id,
         [g.step for g in _WORKLOADS.values()],
         t, spec.rates, spec.knobs, state, key_t,
     )
+
+
+# Unroll cap for the generators' small recurrence scans (the MMPP state
+# threading in the block implementations above): XLA CPU compile time grows
+# superlinearly in unrolled-body size, so blocks longer than this run as a
+# rolled loop over MAX_UNROLL-step unrolled chunks.  Only these tiny bodies
+# unroll at all — unrolling the streaming kernel's full physics step was
+# measured a net loss on XLA CPU (~1.7× slower execution and ~6× longer
+# compiles at B=128 than the rolled loop), so the simulator keeps its inner
+# scan rolled.
+MAX_UNROLL = 16
+
+
+def step_block(
+    spec: WorkloadSpec,
+    state: jnp.ndarray,
+    ts: jnp.ndarray,
+    unroll: int | None = None,
+    gen: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Synthesize a whole (B, N) arrival block in one call.
+
+    ``ts`` is the (B,) int32 step-counter vector of the block.  The per-step
+    keys are the same counter-based ``fold_in(spec.key, t)`` draws the
+    scalar path makes — batched through ``vmap`` (pure integer hashing, so
+    bit-exact under batching) — and each generator's registered *block*
+    function synthesizes its rows from them: stateless generators as one
+    vmapped batched call (one RNG kernel per block instead of B), stateful
+    MMPP generators by presampling their uniforms in batch and scanning
+    only the cheap state recurrence, unrolled ``unroll`` steps at a time
+    (default ``min(B, MAX_UNROLL)``).  One ``lax.switch`` dispatch per
+    block replaces B per-step dispatches; every route is bit-identical to
+    B sequential ``workload_step`` calls (same draws per ``(spec, t)``,
+    same recurrence ops, same state threading — the parity property in
+    tests/test_workload_synthesis.py checks each generator).
+
+    A static ``gen`` skips the switch entirely (see ``workload_step`` — the
+    vmapped switch's evaluate-all-branches lowering is what makes every
+    scenario pay the poisson sampler); the grouped sweep path passes it.
+    """
+    b = ts.shape[0]
+    u = min(b, MAX_UNROLL) if unroll is None else int(unroll)
+    keys = jax.vmap(
+        lambda t: jax.random.fold_in(jax.random.wrap_key_data(spec.key_data), t)
+    )(ts)
+    if gen is not None:
+        return _WORKLOADS[gen].block(ts, spec.rates, spec.knobs, state, keys, u)
+
+    def branch(g: _WorkloadGen):
+        return lambda: g.block(ts, spec.rates, spec.knobs, state, keys, u)
+
+    rows, new_state = jax.lax.switch(
+        spec.gen_id, [branch(g) for g in _WORKLOADS.values()]
+    )
+    return rows, new_state
 
 
 @functools.partial(jax.jit, static_argnames=("num_steps",))
@@ -437,18 +574,18 @@ def stack_specs(specs: Sequence[WorkloadSpec], name: str = "stacked") -> Workloa
 # transformed rate vectors — a rate transform, not a distinct process.
 
 
-@register_workload("constant")
+@register_workload("constant", stateless=True)
 def _constant_step(t, rates, knobs, state, key_t):
     return rates, state
 
 
-@register_workload("poisson")
+@register_workload("poisson", stateless=True)
 def _poisson_step(t, rates, knobs, state, key_t):
     draws = jax.random.poisson(key_t, rates, shape=rates.shape)
     return draws.astype(jnp.float32), state
 
 
-@register_workload("spike")
+@register_workload("spike", stateless=True)
 def _spike_step(t, rates, knobs, state, key_t):
     agent, start, length, magnitude = knobs[0], knobs[1], knobs[2], knobs[3]
     tf = t.astype(jnp.float32)  # exact for any horizon below 2**24
@@ -457,7 +594,7 @@ def _spike_step(t, rates, knobs, state, key_t):
     return jnp.where(in_spike & col, rates * magnitude, rates), state
 
 
-@register_workload("diurnal")
+@register_workload("diurnal", stateless=True)
 def _diurnal_step(t, rates, knobs, state, key_t):
     period, depth = knobs[0], knobs[1]
     mod = 1.0 + depth * jnp.sin(2.0 * jnp.pi * t.astype(jnp.float32) / period)
@@ -468,24 +605,60 @@ def _bursty_init(rates, knobs, key):
     return jax.random.bernoulli(key, 0.5, rates.shape).astype(jnp.float32)
 
 
-@register_workload("bursty", init=_bursty_init)
-def _bursty_step(t, rates, knobs, state, key_t):
+def _bursty_advance(rates, knobs, state, u):
+    # The one MMPP recurrence implementation — step and block both go
+    # through it, so the two paths cannot drift.
     on, off, p_enter, p_exit = knobs[0], knobs[1], knobs[2], knobs[3]
-    u = jax.random.uniform(key_t, rates.shape)
     nxt = jnp.where(state > 0.5, u >= p_exit, u < p_enter)
     lam = rates * jnp.where(nxt, on, off)
     return lam, nxt.astype(jnp.float32)
 
 
-@register_workload("correlated")
-def _correlated_step(t, rates, knobs, state, key_t):
+def _bursty_block(ts, rates, knobs, state, keys, unroll):
+    # Presample the whole block's uniforms in one batched draw; only the
+    # cheap where-threading recurrence stays sequential.
+    u = jax.vmap(lambda k: jax.random.uniform(k, rates.shape))(keys)
+
+    def body(st, u_t):
+        lam, st = _bursty_advance(rates, knobs, st, u_t)
+        return st, lam
+
+    new_state, rows = jax.lax.scan(body, state, u, unroll=unroll)
+    return rows, new_state
+
+
+@register_workload("bursty", init=_bursty_init, block=_bursty_block)
+def _bursty_step(t, rates, knobs, state, key_t):
+    return _bursty_advance(
+        rates, knobs, state, jax.random.uniform(key_t, rates.shape)
+    )
+
+
+def _correlated_advance(rates, knobs, state, u):
     surge, p_enter, p_exit = knobs[0], knobs[1], knobs[2]
-    u = jax.random.uniform(key_t, ())
     nxt = jnp.where(state[0] > 0.5, u >= p_exit, u < p_enter)
     lam = rates * jnp.where(nxt, surge, 1.0)
     # The shared chain's single bit, broadcast so every generator's state
     # leaf has one (N,) shape under the switch.
     return lam, jnp.broadcast_to(nxt.astype(jnp.float32), rates.shape)
+
+
+def _correlated_block(ts, rates, knobs, state, keys, unroll):
+    u = jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+
+    def body(st, u_t):
+        lam, st = _correlated_advance(rates, knobs, st, u_t)
+        return st, lam
+
+    new_state, rows = jax.lax.scan(body, state, u, unroll=unroll)
+    return rows, new_state
+
+
+@register_workload("correlated", block=_correlated_block)
+def _correlated_step(t, rates, knobs, state, key_t):
+    return _correlated_advance(
+        rates, knobs, state, jax.random.uniform(key_t, ())
+    )
 
 
 # -- spec constructors (one per scenario type) -------------------------------

@@ -36,6 +36,10 @@ FLOOR_POLICIES = {
     "water_filling": lambda lam, q: (lam + q) > 0,
     "throughput_greedy": lambda lam, q: (lam + q) > 0,
     "objective_descent": lambda lam, q: (lam + q) > 0,
+    "sqrt_demand": lambda lam, q: (lam + q) > 0,
+    # _check_invariants dispatches with lam_ema = lam, so the EMA-driven
+    # pressure reduces to the water_filling predicate here.
+    "ema_water_filling": lambda lam, q: (lam + q) > 0,
 }
 
 

@@ -180,20 +180,21 @@ def test_host_device_env_sets_flag_and_strips_stale_one():
 
 
 def _fleet_grid(shard, sizes=ODD_FLEET_SIZES, stream=None, policies=POLICIES,
-                synthesize=None):
+                synthesize=None, block_size=None):
     fleets = [synthetic_fleet(n, seed=i) for i, n in enumerate(sizes)]
     return sweep_fleets(
         fleets, num_steps=NUM_STEPS, seed=0, policies=policies, shard=shard,
-        stream=stream, synthesize=synthesize,
+        stream=stream, synthesize=synthesize, block_size=block_size,
     ).metrics
 
 
-def _entry_grids(shard, synthesize=None):
+def _entry_grids(shard, synthesize=None, block_size=None):
     """Metrics from all four entry points under one shard setting.
 
     ``synthesize=True`` swaps the workload column to ``WorkloadSpec`` rows
     (in-scan synthesis when streaming) — same grid values bit-for-bit, per
-    the synthesis parity contract."""
+    the synthesis parity contract.  ``block_size`` threads the streaming
+    time-block B through, also bit-neutral by contract."""
     fleet = synthetic_fleet(4, seed=0)
     rates = synthetic_rates(4, seed=0)
     if synthesize:
@@ -202,15 +203,16 @@ def _entry_grids(shard, synthesize=None):
         scenarios = scenario_library(rates, num_steps=NUM_STEPS)
     return {
         "sweep": sweep(fleet, scenarios, policies=POLICIES, shard=shard,
-                       synthesize=synthesize).metrics,
-        "fleets": _fleet_grid(shard, synthesize=synthesize),
+                       synthesize=synthesize, block_size=block_size).metrics,
+        "fleets": _fleet_grid(shard, synthesize=synthesize,
+                              block_size=block_size),
         "workflows": sweep_workflows(
             fleet, num_steps=NUM_STEPS, policies=POLICIES, shard=shard,
-            synthesize=synthesize,
+            synthesize=synthesize, block_size=block_size,
         ).metrics,
         "capacity": sweep_capacity(
             fleet, num_steps=NUM_STEPS, policies=POLICIES, shard=shard,
-            synthesize=synthesize,
+            synthesize=synthesize, block_size=block_size,
         ).metrics,
     }
 
@@ -311,6 +313,33 @@ def test_synthesized_sharded_bit_identical_to_unsharded():
 
 
 @multi_device
+def test_sharded_block_size_bit_identical():
+    """The time-blocked two-level scan under ``shard_map``: ``block_size``
+    is a pure schedule change inside each device's shard body, so B=5
+    (forcing the masked tail at S=12) must match both the sharded B=1 grid
+    and the unsharded blocked grid bit-for-bit — materialized and in-scan
+    synthesized arms alike."""
+    base = _entry_grids(True)
+    blocked = _entry_grids(True, block_size=5)
+    unsharded_blocked = _entry_grids(False, block_size=5)
+    for name in base:
+        np.testing.assert_array_equal(
+            blocked[name], base[name], err_msg=f"B=5 vs B=1 sharded: {name}"
+        )
+        np.testing.assert_array_equal(
+            blocked[name], unsharded_blocked[name],
+            err_msg=f"sharded vs unsharded at B=5: {name}",
+        )
+    synth_ref = _entry_grids(False, synthesize=True)
+    synth_blocked = _entry_grids(True, synthesize=True, block_size=5)
+    for name in synth_blocked:
+        np.testing.assert_array_equal(
+            synth_blocked[name], synth_ref[name],
+            err_msg=f"synthesized sharded B=5: {name}",
+        )
+
+
+@multi_device
 def test_escape_hatch_forces_unsharded_path(monkeypatch):
     monkeypatch.setenv(sharding.SHARD_ENV, "0")
     hatch = _fleet_grid(shard=None)
@@ -329,7 +358,10 @@ import tests.test_sharding as t
 grids = t._entry_grids(True)
 odd = t._fleet_grid(shard=True)
 odd3d = t._fleet_grid(shard="3d")
-np.savez({out!r}, odd=odd, odd3d=odd3d, **grids)
+odd_blocked = t._fleet_grid(shard=True, block_size=5)
+odd_blocked_synth = t._fleet_grid(shard=True, synthesize=True, block_size=5)
+np.savez({out!r}, odd=odd, odd3d=odd3d, odd_blocked=odd_blocked,
+         odd_blocked_synth=odd_blocked_synth, **grids)
 """
 
 
@@ -341,6 +373,13 @@ def test_sharded_8_device_subprocess_matches_single_device():
     references = _entry_grids(False)
     references["odd"] = _fleet_grid(shard=False)
     references["odd3d"] = references["odd"]  # same unsharded reference
+    # Blocked sharded grids against the *unblocked* unsharded references:
+    # block_size is bit-neutral, so B=5 under the forced-8 mesh must land
+    # on the same values.
+    references["odd_blocked"] = references["odd"]
+    references["odd_blocked_synth"] = _fleet_grid(
+        shard=False, synthesize=True
+    )
     root = os.path.dirname(SRC)
     env = sharding.host_device_env(8)
     env["PYTHONPATH"] = os.pathsep.join(

@@ -31,6 +31,7 @@ from repro.core.capacity import capacity_config
 from repro.core.simulator import (
     METRIC_NAMES,
     SimConfig,
+    resolve_block_size,
     simulate,
     simulate_stream_core,
     trace_metrics,
@@ -198,6 +199,106 @@ class TestStreamCoreAgainstSingleRuns:
                 np.asarray(per_q[i]), np.asarray(want_q),
                 rtol=RTOL, atol=ATOL, err_msg=name,
             )
+
+
+class TestTimeBlocking:
+    """The time-blocked two-level scan is a pure schedule change:
+    ``block_size`` must never alter a single bit of any output."""
+
+    # Covers the two new registered policies alongside EMA-coupled ones;
+    # a subset keeps per-shape XLA compiles affordable (the full-registry
+    # bit-identity bar is held by the B=1 routing — identical scan — plus
+    # the property below exercising blocked dispatch itself).
+    NAMES = ("adaptive", "water_filling", "sqrt_demand", "ema_water_filling")
+
+    def test_env_var_matches_explicit_block_size(self, monkeypatch):
+        scen = scenario_library(PAPER_ARRIVAL_RATES, num_steps=13, seed=0)[:2]
+        base = sweep(FLEET, scen, policies=self.NAMES)
+        explicit = sweep(FLEET, scen, policies=self.NAMES, block_size=4)
+        monkeypatch.setenv("REPRO_SWEEP_BLOCK", "4")
+        via_env = sweep(FLEET, scen, policies=self.NAMES)
+        np.testing.assert_array_equal(
+            np.asarray(explicit.metrics), np.asarray(base.metrics)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(via_env.metrics), np.asarray(base.metrics)
+        )
+
+    def test_block_size_below_one_rejected(self):
+        with pytest.raises(ValueError, match="block_size"):
+            resolve_block_size(0)
+        with pytest.raises(ValueError, match="block_size"):
+            resolve_block_size(-3)
+
+    @hypothesis.given(
+        gen=st.sampled_from(("poisson", "bursty", "correlated", "diurnal")),
+        key=st.integers(0, 6),
+        # Both horizons are indivisible by 3 and 64, so every blocked run
+        # exercises the masked tail; at 65 steps B=3 crosses 21 block
+        # boundaries with the MMPP regime state carried across each one,
+        # and B=64 covers full-block + tail; at 20 steps B=64 > S covers
+        # the tail-only path.
+        num_steps=st.sampled_from((20, 65)),
+        synth=st.booleans(),
+    )
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_blocked_scan_is_bit_identical(self, gen, key, num_steps, synth):
+        n = 4
+        rates = workload.synthetic_rates(n, seed=1)
+        fleet = synthetic_fleet(n, seed=1)
+        if gen == "diurnal":
+            spec = workload.diurnal_spec(rates, num_steps)
+        else:
+            spec = getattr(workload, f"{gen}_spec")(
+                rates, num_steps, jax.random.key(key)
+            )
+        cfg = SimConfig()
+        arr = None if synth else workload.materialize(spec)
+        wspec = spec if synth else None
+        base = simulate_stream_core(
+            arr, fleet, cfg, self.NAMES, workload_spec=wspec, block_size=1
+        )
+        for b in (3, 64):
+            got = simulate_stream_core(
+                arr, fleet, cfg, self.NAMES, workload_spec=wspec, block_size=b
+            )
+            for part, want in zip(got, base):
+                np.testing.assert_array_equal(
+                    np.asarray(part), np.asarray(want),
+                    err_msg=f"{gen}/key={key}/S={num_steps}/B={b}/synth={synth}",
+                )
+
+    def test_gen_grouped_dispatch_bit_identical(self):
+        """The grouped static-dispatch synth path (``synth_gen_groups`` —
+        one vmap per generator group, no vmapped switch) must reproduce the
+        switch path bit-for-bit, across block sizes, on the full scenario
+        library (every registered generator plus a multi-member constant
+        group, in interleaved order)."""
+        n = 4
+        fleet = synthetic_fleet(n, seed=0)
+        specs = workload.scenario_specs(
+            workload.synthetic_rates(n, seed=0), num_steps=23, seed=0
+        )
+        stack = workload.stack_specs(specs)
+        groups = sweep_mod.synth_gen_groups(stack)
+        # The library interleaves generators, so grouping really permutes.
+        assert groups is not None and len(groups) > 1
+        assert sorted(i for _, idx in groups for i in idx) == list(
+            range(len(specs))
+        )
+        cfg = SimConfig()
+        for b in (1, 4):
+            base = sweep_mod._stream_grid_jit(
+                None, fleet, None, None, stack, cfg, self.NAMES, None, 1, b
+            )
+            grouped = sweep_mod._stream_grid_jit(
+                None, fleet, None, None, stack, cfg, self.NAMES, None, 1, b,
+                gen_groups=groups,
+            )
+            for part, want in zip(grouped, base):
+                np.testing.assert_array_equal(
+                    np.asarray(part), np.asarray(want), err_msg=f"B={b}"
+                )
 
 
 @hypothesis.given(

@@ -149,6 +149,30 @@ def test_generator_parity_property(gen, seed, steps):
     )
 
 
+@hypothesis.given(
+    gen=st.sampled_from(
+        ("constant", "poisson", "spike", "diurnal", "bursty", "correlated")
+    ),
+    seed=st.integers(0, 2**31 - 1),
+    # 7-step blocks over 20 steps leave a ragged 6-step tail; block 25 > S
+    # covers the single-short-block path.
+    steps=st.sampled_from((1, 3, 20)),
+    block=st.sampled_from((2, 7, 25)),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_step_block_parity_property(gen, seed, steps, block):
+    """``workload.step_block`` (the blocked vectorized synthesis the
+    time-blocked kernel runs, here driven by ``synthesize_loop``'s
+    ``block_size`` walk) produces the same draws bit-for-bit as the
+    per-step path, with MMPP state threaded across block boundaries and
+    ragged tails handled eagerly."""
+    spec = _spec_for(gen, RATES, steps, jax.random.key(seed))
+    np.testing.assert_array_equal(
+        synthesize_loop(spec, block_size=block),
+        synthesize_loop(spec),
+    )
+
+
 # -- kernel layer: in-scan synthesis vs materialized arrivals ----------------
 
 
