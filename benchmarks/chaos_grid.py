@@ -1,0 +1,170 @@
+"""Chaos grid: every registered policy ranked under failure injection.
+
+One streaming sweep call with a stacked failure axis evaluates the full
+policy registry against a (revocation rate x deadline tightness) grid of
+``FailureSpec`` rows — including the all-off baseline — in a single
+vmapped kernel.  Two robustness rankings come out of it:
+
+- **availability**: a cell's throughput relative to the same
+  policy/scenario under the no-failure baseline row (how much service a
+  policy preserves when instances are revoked mid-flight);
+- **SLO attainment**: served mass as a fraction of served + deadline
+  drops + deadline violations (how much of the traffic a policy lands
+  inside its latency budget).
+
+The point of the benchmark is that these rankings *disagree* with the
+mean-latency ranking: a policy that wins on average latency in calm seas
+can shed exactly the wrong queues once deadlines bite.  Each
+(failure x scenario) cell records its SLO-attainment winner next to its
+avg-latency winner and the summary counts the differing cells.
+
+Writes ``experiments/paper/chaos_grid.json`` and the stable-schema
+``BENCH_chaos.json`` at the repo root (see ``benchmarks/_bench.py``)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from benchmarks import _bench, _smoke
+from repro.core.agents import PAPER_ARRIVAL_RATES, paper_fleet
+from repro.core.failures import failure_spec
+from repro.core.sweep import Scenario, sweep
+from repro.core import workload
+
+REPS = 10
+_EPS = 1e-9
+
+# The chaos grid's two axes.  Revocation is an MMPP burst process (enter
+# probability per step; exit 0.35, 60% of the warm pool gone while in the
+# burst); the deadline axis tightens the per-request drain-time budget
+# with a single retry before mass is dropped.
+REVOCATION_RATES = (0.0, 0.08, 0.25)
+DEADLINES_S = (0.0, 8.0, 2.0)
+
+
+def _cell_name(rev: float, dl: float) -> str:
+    if rev == 0.0 and dl == 0.0:
+        return "none"
+    return f"rev{rev:g}_dl{dl:g}"
+
+
+def failure_grid() -> tuple:
+    """The (revocation x deadline) FailureSpec rows, baseline first."""
+    specs = []
+    for rev in REVOCATION_RATES:
+        for dl in DEADLINES_S:
+            specs.append(failure_spec(
+                _cell_name(rev, dl),
+                revoke_p_enter=rev,
+                revoke_p_exit=0.35,
+                revoke_frac=0.6 if rev > 0.0 else 0.0,
+                deadline_s=dl,
+                retry_budget=1 if dl > 0.0 else 0,
+                seed=7,
+            ))
+    return tuple(specs)
+
+
+def run(out_dir: str | None = None) -> list[str]:
+    bench_dir = out_dir  # explicit destination redirects BENCH files too
+    out_dir = _smoke.out_dir() if out_dir is None else out_dir
+    fleet = paper_fleet()
+    num_steps = _smoke.steps(100)
+    scenarios = (
+        Scenario("constant", workload.constant(PAPER_ARRIVAL_RATES, num_steps)),
+        Scenario("overload_3x",
+                 workload.scaled(PAPER_ARRIVAL_RATES, num_steps, 3.0)),
+    )
+    specs = failure_grid()
+
+    reps = _smoke.reps(REPS, 2)
+    wall = _bench.time_device(
+        lambda: sweep(fleet, scenarios, failures=specs, return_arrays=True),
+        reps,
+    )
+    res = sweep(fleet, scenarios, failures=specs)
+    assert res.failure_names is not None
+    base = res.failure_names.index("none")
+
+    thr = res.metric("total_throughput")       # (B, P, W)
+    dropped = res.metric("dropped")
+    viol = res.metric("slo_violations")
+    lat = res.metric("avg_latency")
+    availability = thr / (thr[base][None] + _EPS)
+    slo_attainment = thr / (thr + dropped + viol + _EPS)
+
+    cells = []
+    differing = 0
+    for b, fname in enumerate(res.failure_names):
+        for w, scen in enumerate(res.scenario_names):
+            slo_w = int(np.argmax(slo_attainment[b, :, w]))
+            lat_w = int(np.argmin(lat[b, :, w]))
+            differs = slo_w != lat_w
+            differing += differs
+            cells.append({
+                "failure": fname,
+                "scenario": scen,
+                "slo_winner": res.policy_names[slo_w],
+                "slo_attainment": round(float(slo_attainment[b, slo_w, w]), 4),
+                "latency_winner": res.policy_names[lat_w],
+                "winner_latency": round(float(lat[b, lat_w, w]), 2),
+                "winners_differ": bool(differs),
+                "availability": {
+                    pol: round(float(availability[b, p, w]), 4)
+                    for p, pol in enumerate(res.policy_names)
+                },
+            })
+
+    n_cells = len(res.failure_names) * len(res.policy_names) * len(
+        res.scenario_names)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "chaos_grid.json"), "w") as fh:
+        json.dump(
+            {
+                "policies": list(res.policy_names),
+                "scenarios": list(res.scenario_names),
+                "failures": list(res.failure_names),
+                "revocation_rates": list(REVOCATION_RATES),
+                "deadlines_s": list(DEADLINES_S),
+                "grid_us": wall,
+                "differing_winner_cells": int(differing),
+                "cells": cells,
+            },
+            fh, indent=1,
+        )
+    _bench.write("chaos", [
+        _bench.timing_entry(
+            "chaos_grid", "streaming", fleet.num_agents, num_steps,
+            n_cells, wall,
+            failure_cells=len(res.failure_names),
+            differing_winner_cells=int(differing),
+        )
+    ], out_dir=bench_dir)
+
+    worst = min(
+        (c for c in cells if c["failure"] != "none"),
+        key=lambda c: c["availability"][c["slo_winner"]],
+    )
+    return [
+        f"chaos/grid,{wall:.1f},cells={n_cells}",
+        f"chaos/differing_winners,0,cells={differing}/{len(cells)}",
+        (
+            f"chaos/worst_cell,0,failure={worst['failure']};"
+            f"scenario={worst['scenario']};slo_winner={worst['slo_winner']};"
+            f"attainment={worst['slo_attainment']}"
+        ),
+    ]
+
+
+def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    for line in run():
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

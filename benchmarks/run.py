@@ -28,6 +28,7 @@ if "--index" in sys.argv[1:]:
 
 from benchmarks import (
     allocator_scaling,
+    chaos_grid,
     fig2_timeseries,
     fleet_scaling,
     robustness,
@@ -44,6 +45,7 @@ MODULES = (
     ("table2", table2_metrics),
     ("fig2", fig2_timeseries),
     ("robustness", robustness),
+    ("chaos_grid", chaos_grid),
     ("sweep_grid", sweep_grid),
     ("workflow_topologies", workflow_topologies),
     ("serverless_elasticity", serverless_elasticity),

@@ -253,21 +253,21 @@ def _worker(cfg: dict) -> dict:
                 stack = workload.stack_specs(specs)
                 compile_s, compiled = _bench.compile_probe(
                     sweep_mod._stream_grid_jit,
-                    None, fleet, None, None, stack, config, names, None,
-                    1, bsz, sweep_mod.synth_gen_groups(stack),
+                    None, fleet, None, None, stack, None, config, names,
+                    None, 1, bsz, sweep_mod.synth_gen_groups(stack),
                 )
-                fn = lambda: compiled(None, fleet, None, None, stack)
+                fn = lambda: compiled(None, fleet, None, None, stack, None)
             else:
                 arr = jnp.stack([workload.materialize(s) for s in specs])
                 compile_s, compiled = _bench.compile_probe(
                     sweep_mod._stream_grid_jit,
-                    arr, fleet, None, None, None, config, names, None,
+                    arr, fleet, None, None, None, None, config, names, None,
                     1, bsz,
                 )
                 del arr
                 fn = lambda: compiled(
                     jnp.stack([workload.materialize(s) for s in specs]),
-                    fleet, None, None, None,
+                    fleet, None, None, None, None,
                 )
             wall_us = _bench.time_device(fn, reps)
             entries.append(_bench.timing_entry(
@@ -289,7 +289,7 @@ def _worker(cfg: dict) -> dict:
             sub = names[:1]
             cells = f * len(sub)
             fn = lambda: sweep_mod._stream_grid_jit(
-                None, fleet, None, None, stack, config, sub, None,
+                None, fleet, None, None, stack, None, config, sub, None,
                 gen_groups=sweep_mod.synth_gen_groups(stack),
             )
             wall_us = _bench.time_device(fn, task["reps"])
@@ -319,7 +319,7 @@ def _worker(cfg: dict) -> dict:
                 )
             else:
                 fn = lambda: sweep_mod._stream_grid_jit(
-                    None, fleet, None, None, stack, config, names, None
+                    None, fleet, None, None, stack, None, config, names, None
                 )
             wall_us = _bench.time_device(fn, reps)
             entries.append(_bench.timing_entry(
@@ -359,8 +359,8 @@ def _worker(cfg: dict) -> dict:
                 arrivals_r = jax.device_put(arrivals, layout)
                 stacked_r = jax.device_put(stacked, layout)
                 fn = lambda: sweep_mod._stream_grid_jit(
-                    arrivals_r, stacked_r, None, None, None, config, names,
-                    "fleet",
+                    arrivals_r, stacked_r, None, None, None, None, config,
+                    names, "fleet",
                 )
             elif jax.device_count() > 1:
                 # The donated arrivals buffer is consumed per call; the
@@ -372,7 +372,7 @@ def _worker(cfg: dict) -> dict:
                 )
             else:
                 fn = lambda: sweep_mod._stream_grid_jit(
-                    arrivals, stacked, None, None, None, config, names,
+                    arrivals, stacked, None, None, None, None, config, names,
                     "fleet",
                 )
         wall_us = _bench.time_device(fn, reps)

@@ -1,0 +1,349 @@
+"""Failure injection: revocation, agent outages, and request deadlines.
+
+Mirrors the ``workload.py`` / ``capacity.py`` idiom: a single registered
+pytree (``FailureSpec``) whose array leaves flow through jit/vmap, a
+builder + eager validator + field-wise stacker, and a scenario library.
+Unlike the allocation/capacity registries there is **no** ``lax.switch``
+dispatch here — the injectors *compose* (a chaos scenario typically runs
+revocation and deadlines at once), so each injector is gated by its own
+knobs and all-zero knobs disable it exactly.
+
+Three injectors:
+
+* **instance revocation** — a Markov-modulated on/off process (the same
+  two-state recurrence as the ``bursty`` MMPP workload generator) whose
+  "on" state claws back ``revoke_frac`` of the warm capacity mid-step:
+  the revoked share of in-service work drains back into the agent
+  queues, and under an elastic capacity policy the revoked instances are
+  removed from ``CapacityState.warm`` so the autoscaler must re-provision
+  them through the cold-start pipeline.
+* **agent failure/recovery** — transient flips of an agent's effective
+  ``fleet.active`` gate (its own MMPP chain, plus an optional scheduled
+  outage window for hand-computable tests).  Queues are preserved across
+  the outage; arrivals keep accumulating.
+* **request deadlines** — fluid-limit deadline/retry accounting: backlog
+  whose projected sojourn exceeds ``deadline_s`` expires; expired mass is
+  retried (re-entering the queue, up to ``retry_budget`` attempts) or
+  dropped once the budget is exhausted.
+
+RNG is counter-based and shared with the numpy oracle: step ``t`` draws
+``u = uniform(fold_in(fold_in(key, t), slot))`` so both implementations
+see identical chains (the oracle calls :func:`failure_uniforms` too).
+
+Env hatch: ``REPRO_FAILURES=0`` disables failure injection at the eager
+entry points (``simulate`` / ``sweep*`` / ``FleetEngine``) — a kill
+switch for A/B-ing a chaos config without editing call sites.
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# Retry classes tracked per agent: class 0 is first-attempt mass, classes
+# 1..RETRY_CLASSES-1 are mass on its k-th retry.  ``retry_budget`` is
+# clamped to RETRY_CLASSES - 1 so the class array stays statically sized.
+RETRY_CLASSES = 4
+
+FAILURE_ENV = "REPRO_FAILURES"
+
+# fold_in slots for the per-step uniforms (shared with the numpy oracle).
+_SLOT_REVOKE = 0
+_SLOT_DOWN = 1
+
+
+class FailureSpec:
+    """Chaos-scenario description; registered pytree.
+
+    Array leaves (all scalars unless noted, so one spec broadcasts over
+    any (policy × agent) batch; stacked specs add a leading axis):
+
+    * ``revoke_p_enter`` / ``revoke_p_exit`` — MMPP transition
+      probabilities of the revocation chain (enter/leave the revoking
+      state per step).  Both zero ⇒ injector off.
+    * ``revoke_frac`` — fraction of warm capacity yanked while the chain
+      is on (∈ [0, 1]).
+    * ``fail_p_enter`` / ``fail_p_exit`` — per-agent outage chain
+      probabilities.  Both zero ⇒ no stochastic outages.
+    * ``outage_start`` / ``outage_len`` / ``outage_agent`` — scheduled
+      deterministic outage window for one agent (len 0 ⇒ off); composes
+      with the stochastic chain.
+    * ``deadline_s`` — per-request sojourn deadline in seconds
+      (scalar or (N,); ≤ 0 ⇒ deadlines off).
+    * ``retry_budget`` — retry attempts before expired mass is dropped
+      (clamped to ``RETRY_CLASSES - 1``).
+    * ``key_data`` — (2,) uint32 raw PRNG key for the chains.
+
+    ``name`` is static aux data (cosmetic; excluded from the treedef
+    hash via equality on the leaf structure only, like ``WorkloadSpec``).
+    """
+
+    __slots__ = ("name", "revoke_p_enter", "revoke_p_exit", "revoke_frac",
+                 "fail_p_enter", "fail_p_exit", "outage_start", "outage_len",
+                 "outage_agent", "deadline_s", "retry_budget", "key_data")
+
+    _LEAVES = ("revoke_p_enter", "revoke_p_exit", "revoke_frac",
+               "fail_p_enter", "fail_p_exit", "outage_start", "outage_len",
+               "outage_agent", "deadline_s", "retry_budget", "key_data")
+
+    def __init__(self, name, revoke_p_enter, revoke_p_exit, revoke_frac,
+                 fail_p_enter, fail_p_exit, outage_start, outage_len,
+                 outage_agent, deadline_s, retry_budget, key_data):
+        self.name = name
+        self.revoke_p_enter = revoke_p_enter
+        self.revoke_p_exit = revoke_p_exit
+        self.revoke_frac = revoke_frac
+        self.fail_p_enter = fail_p_enter
+        self.fail_p_exit = fail_p_exit
+        self.outage_start = outage_start
+        self.outage_len = outage_len
+        self.outage_agent = outage_agent
+        self.deadline_s = deadline_s
+        self.retry_budget = retry_budget
+        self.key_data = key_data
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self._LEAVES), self.name
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(aux, *leaves)
+
+    @property
+    def batched(self) -> bool:
+        return jnp.ndim(self.revoke_frac) > 0
+
+
+jax.tree_util.register_pytree_node(
+    FailureSpec, FailureSpec.tree_flatten, FailureSpec.tree_unflatten
+)
+
+
+def failure_spec(
+    name: str = "custom",
+    *,
+    revoke_p_enter: float = 0.0,
+    revoke_p_exit: float = 1.0,
+    revoke_frac: float = 0.0,
+    fail_p_enter: float = 0.0,
+    fail_p_exit: float = 1.0,
+    outage_start: int = 0,
+    outage_len: int = 0,
+    outage_agent: int = 0,
+    deadline_s: float | Sequence[float] = 0.0,
+    retry_budget: int = 0,
+    seed: int = 0,
+) -> FailureSpec:
+    """Build a validated :class:`FailureSpec` (all injectors default off)."""
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    spec = FailureSpec(
+        name=name,
+        revoke_p_enter=f32(revoke_p_enter),
+        revoke_p_exit=f32(revoke_p_exit),
+        revoke_frac=f32(revoke_frac),
+        fail_p_enter=f32(fail_p_enter),
+        fail_p_exit=f32(fail_p_exit),
+        outage_start=f32(outage_start),
+        outage_len=f32(outage_len),
+        outage_agent=f32(outage_agent),
+        deadline_s=f32(deadline_s),
+        retry_budget=f32(retry_budget),
+        key_data=jax.random.key_data(jax.random.key(seed)),
+    )
+    check_failures(spec)
+    return spec
+
+
+def check_failures(spec: FailureSpec) -> None:
+    """Eager validation; accepts batched (stacked) leaves."""
+    import numpy as np
+
+    def arr(x):
+        return np.asarray(x, np.float64)
+
+    for f in ("revoke_p_enter", "revoke_p_exit", "fail_p_enter",
+              "fail_p_exit"):
+        v = arr(getattr(spec, f))
+        if ((v < 0) | (v > 1)).any():
+            raise ValueError(f"failures.{f} must lie in [0, 1], got {v}")
+    rf = arr(spec.revoke_frac)
+    if ((rf < 0) | (rf > 1)).any():
+        raise ValueError(f"failures.revoke_frac must lie in [0, 1], got {rf}")
+    rb = arr(spec.retry_budget)
+    if (rb < 0).any() or (rb > RETRY_CLASSES - 1).any():
+        raise ValueError(
+            f"failures.retry_budget must lie in [0, {RETRY_CLASSES - 1}] "
+            f"(RETRY_CLASSES={RETRY_CLASSES}), got {rb}"
+        )
+    if (arr(spec.outage_len) < 0).any():
+        raise ValueError("failures.outage_len must be >= 0")
+
+
+def stack_failures(specs: Sequence[FailureSpec]) -> FailureSpec:
+    """Field-wise stack for the vmapped chaos axis (leading axis = spec)."""
+    if not specs:
+        raise ValueError("stack_failures needs at least one spec")
+    names = [s.name for s in specs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"failure scenario names must be unique, got {names}")
+    # deadline_s may be scalar or (N,) — broadcast to a common shape first.
+    dshape = jnp.broadcast_shapes(*(jnp.shape(s.deadline_s) for s in specs))
+    leaves = {}
+    for f in FailureSpec._LEAVES:
+        vals = [getattr(s, f) for s in specs]
+        if f == "deadline_s":
+            vals = [jnp.broadcast_to(v, dshape) for v in vals]
+        leaves[f] = jnp.stack(vals)
+    return FailureSpec(name=tuple(names), **leaves)
+
+
+def failure_names() -> tuple[str, ...]:
+    """The injector families composed by this module (introspection)."""
+    return ("revocation", "agent_outage", "deadline")
+
+
+def failures_env_enabled() -> bool:
+    return os.environ.get(FAILURE_ENV, "1") not in ("0", "false", "off")
+
+
+def resolve_failures(failures: FailureSpec | None) -> FailureSpec | None:
+    """Apply the ``REPRO_FAILURES`` kill switch at eager entry points."""
+    if failures is not None and not failures_env_enabled():
+        return None
+    return failures
+
+
+def failure_scenario_library(seed: int = 0) -> tuple[FailureSpec, ...]:
+    """Canonical chaos scenarios for the sweep axis / benchmarks."""
+    return (
+        failure_spec("none", seed=seed),
+        failure_spec("revoke_mild", revoke_p_enter=0.05, revoke_p_exit=0.5,
+                     revoke_frac=0.5, seed=seed),
+        failure_spec("revoke_harsh", revoke_p_enter=0.2, revoke_p_exit=0.3,
+                     revoke_frac=0.9, seed=seed),
+        failure_spec("agent_flaky", fail_p_enter=0.05, fail_p_exit=0.4,
+                     seed=seed),
+        failure_spec("deadline_tight", deadline_s=2.0, retry_budget=1,
+                     seed=seed),
+        failure_spec("chaos", revoke_p_enter=0.1, revoke_p_exit=0.4,
+                     revoke_frac=0.7, fail_p_enter=0.03, fail_p_exit=0.5,
+                     deadline_s=3.0, retry_budget=2, seed=seed),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-step chain machinery (shared by the JAX kernels and the numpy oracle)
+# ---------------------------------------------------------------------------
+
+class FailureState(NamedTuple):
+    """Failure-chain scan-carry state (auto-pytree).
+
+    Memory is O(P·N) per cell: ``retry_q`` dominates with
+    (RETRY_CLASSES-1, N) per policy row.
+    """
+    rev_on: jnp.ndarray       # ()      revocation chain on/off
+    down: jnp.ndarray         # (N,)    agent outage chains
+    fail_prev: jnp.ndarray    # ()      failure was active last step
+    recovering: jnp.ndarray   # (...,)  draining post-outage backlog
+    q_mark: jnp.ndarray       # (...,)  pre-outage backlog watermark
+    retry_q: jnp.ndarray      # (..., RETRY_CLASSES-1, N) retried mass
+
+
+def init_failure_state(num_agents: int, batch_shape: tuple = ()) -> FailureState:
+    z = jnp.zeros(batch_shape, jnp.float32)
+    return FailureState(
+        rev_on=jnp.zeros((), jnp.float32),
+        down=jnp.zeros((num_agents,), jnp.float32),
+        fail_prev=jnp.zeros((), jnp.float32),
+        recovering=z,
+        q_mark=z,
+        retry_q=jnp.zeros(batch_shape + (RETRY_CLASSES - 1, num_agents),
+                          jnp.float32),
+    )
+
+
+def failure_uniforms(spec: FailureSpec, t, num_agents: int):
+    """The step-``t`` uniforms, counter-based: (u_rev (), u_down (N,)).
+
+    Pure in ``t`` — same (spec, t) ⇒ same draws regardless of how many
+    steps ran before, so the numpy oracle replays the exact chains.
+    """
+    key_t = jax.random.fold_in(jax.random.wrap_key_data(spec.key_data), t)
+    u_rev = jax.random.uniform(jax.random.fold_in(key_t, _SLOT_REVOKE))
+    u_down = jax.random.uniform(jax.random.fold_in(key_t, _SLOT_DOWN),
+                                (num_agents,))
+    return u_rev, u_down
+
+
+def advance_failures(spec: FailureSpec, t, rev_on, down, u_rev, u_down):
+    """One step of the revocation + outage chains.
+
+    Returns ``(phi, up, rev_nxt, down_nxt)``:
+
+    * ``phi`` () — fraction of warm capacity revoked this step
+    * ``up`` (N,) — effective per-agent availability gate (1 = healthy)
+    * ``rev_nxt`` / ``down_nxt`` — chain states to carry forward
+      (``down_nxt`` is the *stochastic* chain only; the scheduled outage
+      is recomputed from ``t`` each step and never enters the carry).
+
+    Same two-state recurrence as the ``bursty`` MMPP generator: in-state
+    stays unless ``u >= p_exit``, out-of-state enters when ``u < p_enter``.
+    """
+    rev_nxt = jnp.where(rev_on > 0.5, u_rev >= spec.revoke_p_exit,
+                        u_rev < spec.revoke_p_enter).astype(jnp.float32)
+    down_nxt = jnp.where(down > 0.5, u_down >= spec.fail_p_exit,
+                         u_down < spec.fail_p_enter).astype(jnp.float32)
+    phi = spec.revoke_frac * rev_nxt
+    tf = jnp.asarray(t, jnp.float32)
+    sched = ((tf >= spec.outage_start)
+             & (tf < spec.outage_start + spec.outage_len)).astype(jnp.float32)
+    col = (jnp.arange(down.shape[-1], dtype=jnp.float32)
+           == spec.outage_agent).astype(jnp.float32)
+    down_eff = jnp.clip(down_nxt + sched * col, 0.0, 1.0)
+    return phi, 1.0 - down_eff, rev_nxt, down_nxt
+
+
+def deadline_step(spec: FailureSpec, queue, lam, served, q_post, cap_eff,
+                  retry_q, eps: float = 1e-9):
+    """Fluid deadline/retry accounting for one step.
+
+    Inputs are post-service quantities: ``q_post = queue + lam - served``
+    is the surviving backlog and ``cap_eff`` the effective (revocation-
+    scaled) service rate.  Backlog whose projected sojourn
+    ``q_post / cap_eff`` exceeds ``deadline_s`` expires proportionally
+    across retry classes; expired mass in classes below ``retry_budget``
+    re-enters the queue one class up, the rest is dropped.
+
+    Returns ``(new_q, new_retry_q, dropped, retried, viol)`` — all
+    per-agent (..., N) except ``new_retry_q`` (..., C-1, N).  Exact mass
+    balance: ``new_q = q_post - dropped``.
+    """
+    enabled = (spec.deadline_s > 0).astype(jnp.float32)
+    # expired mass: backlog beyond what the deadline's worth of service
+    # can clear.  viol doubles as the SLO-violation mass.
+    expired = enabled * jnp.maximum(
+        q_post - cap_eff * jnp.maximum(spec.deadline_s, 0.0), 0.0)
+    # split the surviving backlog across retry classes proportionally to
+    # each class's pre-service share (service is class-blind fluid).
+    x = queue + lam
+    f_surv = q_post / jnp.maximum(x, eps)
+    m0 = jnp.maximum(x - retry_q.sum(-2), 0.0)
+    m = jnp.concatenate([m0[..., None, :], retry_q], axis=-2)  # (..., C, N)
+    m_post = m * f_surv[..., None, :]
+    exp_frac = expired / jnp.maximum(q_post, eps)
+    e = m_post * exp_frac[..., None, :]          # expired mass per class
+    k = jnp.arange(RETRY_CLASSES, dtype=jnp.float32)
+    budget = jnp.clip(spec.retry_budget, 0.0, RETRY_CLASSES - 1.0)
+    retry_mask = (k < budget).astype(jnp.float32)[:, None]   # (C, 1)
+    ret = e * retry_mask                          # re-enters, one class up
+    dro = e * (1.0 - retry_mask)                  # budget exhausted: drop
+    promoted = jnp.concatenate(
+        [jnp.zeros_like(ret[..., :1, :]), ret[..., :-1, :]], axis=-2)
+    new_m = (m_post - e) + promoted
+    new_retry_q = new_m[..., 1:, :]
+    dropped = dro.sum(-2)
+    retried = ret.sum(-2)
+    new_q = q_post - dropped
+    return new_q, new_retry_q, dropped, retried, expired

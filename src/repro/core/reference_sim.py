@@ -227,10 +227,21 @@ def simulate_numpy(
     workflow: Workflow | None = None,
     capacity: CapacityConfig | None = None,
     num_gpus: float = 1.0,
+    failures=None,
 ) -> dict:
     """Returns per-step arrays matching SimTrace semantics (plus
-    ``completed``, the requests exiting the workflow at each agent, and
-    ``warm``/``pending``, the warm pool's trajectory)."""
+    ``completed``, the requests exiting the workflow at each agent,
+    ``warm``/``pending``, the warm pool's trajectory, ``misrouted``, and —
+    under a ``failures`` spec — ``dropped``/``retried``/``expired``/
+    ``recovery``).
+
+    The failure layer (``core/failures.py``) is re-implemented here as
+    straight-line float64 python: the revocation/outage Markov chains are
+    replayed from the *same* counter-based uniforms the scan draws
+    (``failures.failure_uniforms`` is pure in ``t``, so both control-flow
+    frames see identical chains — comparisons on identical floats are
+    exact), and the deadline/retry class bookkeeping is an eager mirror of
+    ``failures.deadline_step``."""
     if policy not in SUPPORTED_POLICIES:
         raise ValueError(
             f"unknown policy {policy!r}; oracle supports {SUPPORTED_POLICIES}"
@@ -268,11 +279,35 @@ def simulate_numpy(
     pipeline = np.zeros(COLD_START_HORIZON)
     idle_s = 0.0
 
+    if failures is not None:
+        from repro.core.failures import RETRY_CLASSES, failure_uniforms
+
+        C = RETRY_CLASSES
+        f_rev_enter = float(np.asarray(failures.revoke_p_enter))
+        f_rev_exit = float(np.asarray(failures.revoke_p_exit))
+        f_rev_frac = float(np.asarray(failures.revoke_frac))
+        f_down_enter = float(np.asarray(failures.fail_p_enter))
+        f_down_exit = float(np.asarray(failures.fail_p_exit))
+        f_out_start = float(np.asarray(failures.outage_start))
+        f_out_len = float(np.asarray(failures.outage_len))
+        f_out_agent = float(np.asarray(failures.outage_agent))
+        deadline = np.broadcast_to(
+            np.asarray(failures.deadline_s, np.float64), (n,)
+        ).copy()
+        budget = float(np.clip(np.asarray(failures.retry_budget), 0, C - 1))
+        rev_on = 0.0
+        down = np.zeros(n)
+        fail_prev = 0.0
+        recovering = 0.0
+        q_mark = 0.0
+        retry_q = np.zeros((C - 1, n))
+
     q = np.zeros(n)
     endo = np.zeros(n)
     ema = arrivals[0].copy()
     out = {"allocation": [], "served": [], "queue": [], "latency": [],
-           "completed": [], "warm": [], "pending": []}
+           "completed": [], "warm": [], "pending": [], "misrouted": [],
+           "dropped": [], "retried": [], "expired": [], "recovery": []}
 
     for t in range(steps):
         lam = arrivals[t] + endo  # total intake: exogenous + routed
@@ -324,11 +359,84 @@ def simulate_numpy(
             # NB: the registry entry always runs the policy's internal
             # latency_cap default (1000), independent of the sim-level cap.
             g = _objective_descent(q, lam, T, R, P, g_total_t)
-        cap = g * T
-        served = np.minimum(cap, q + lam)
-        q = q + lam - served
-        lat = np.minimum(q / np.maximum(cap, _EPS), latency_cap)
-        endo = ((served * fan_out) @ route) * active
+        if failures is None:
+            cap = g * T
+            served = np.minimum(cap, q + lam)
+            q = q + lam - served
+            lat = np.minimum(q / np.maximum(cap, _EPS), latency_cap)
+            dropped = retried = expired = np.zeros(n)
+            in_rec = 0.0
+        else:
+            # Replay the chains from the scan's own uniforms (exact).
+            u_rev, u_down = failure_uniforms(failures, t, n)
+            u_rev = float(np.asarray(u_rev))
+            u_down = np.asarray(u_down, np.float64)
+            rev_on = float(
+                (u_rev >= f_rev_exit) if rev_on > 0.5 else (u_rev < f_rev_enter)
+            )
+            down = np.where(down > 0.5, u_down >= f_down_exit,
+                            u_down < f_down_enter).astype(np.float64)
+            phi = f_rev_frac * rev_on
+            sched = 1.0 if f_out_start <= t < f_out_start + f_out_len else 0.0
+            col = (np.arange(n) == f_out_agent).astype(np.float64)
+            down_eff = np.clip(down + sched * col, 0.0, 1.0)
+            up = 1.0 - down_eff
+            fail_t = float(max(float(phi > 0),
+                               float(((down_eff * active) > 0.5).any())))
+            pre_q_tot = float((q * active).sum())
+            onset = fail_t * (1.0 - fail_prev) * (1.0 - recovering)
+            if onset > 0:
+                q_mark = pre_q_tot
+            # Failure-aware physics (mirror of _failure_queue_step).
+            cap = g * up * T
+            served_raw = np.minimum(cap, q + lam)
+            served = served_raw * (1.0 - phi)
+            q_post = q + lam - served
+            cap_eff = cap * (1.0 - phi)
+            # Deadline/retry class bookkeeping (mirror of deadline_step).
+            enabled = (deadline > 0).astype(np.float64)
+            expired = enabled * np.maximum(
+                q_post - cap_eff * np.maximum(deadline, 0.0), 0.0
+            )
+            x = q + lam
+            f_surv = q_post / np.maximum(x, _EPS)
+            m0 = np.maximum(x - retry_q.sum(axis=0), 0.0)
+            m = np.vstack([m0[None, :], retry_q])
+            m_post = m * f_surv[None, :]
+            exp_frac = expired / np.maximum(q_post, _EPS)
+            e = m_post * exp_frac[None, :]
+            retry_mask = (np.arange(C) < budget).astype(np.float64)[:, None]
+            ret = e * retry_mask
+            dro = e * (1.0 - retry_mask)
+            promoted = np.vstack([np.zeros((1, n)), ret[:-1]])
+            new_m = (m_post - e) + promoted
+            retry_q = new_m[1:]
+            dropped = dro.sum(axis=0)
+            retried = ret.sum(axis=0)
+            q = q_post - dropped
+            # Dead-band snap mirrors _failure_queue_step: roundoff residue
+            # around an exactly-drained queue must not flip queue>0
+            # branches (greedy allocators) or the clipped-latency cliff
+            # across float widths.
+            q = q * (q > 1e-4)
+            lat = np.minimum(q / np.maximum(cap_eff, _EPS), latency_cap) * (
+                q > 1e-4
+            )
+            # Recovery bookkeeping.
+            new_q_tot = float((q * active).sum())
+            in_rec = (1.0 - fail_t) * max(fail_prev, recovering)
+            recovering = recovering if fail_t > 0 else (
+                in_rec * float(new_q_tot > q_mark)
+            )
+            fail_prev = fail_t
+            if capacity is not None:
+                # Revoked instances leave the warm pool; the autoscaler
+                # re-provisions them through the cold-start line next step.
+                warm *= (1.0 - phi)
+            # Billing excludes revoked instance-seconds (as in the kernels).
+            g_total_t = g_total_t * (1.0 - phi)
+        fwd = (served * fan_out) @ route
+        endo = fwd * active
         out["allocation"].append(g.copy())
         out["served"].append(served.copy())
         out["queue"].append(q.copy())
@@ -336,4 +444,12 @@ def simulate_numpy(
         out["completed"].append(served * exit_frac)
         out["warm"].append(g_total_t)
         out["pending"].append(pending_t)
+        out["misrouted"].append(fwd * (1.0 - active))
+        out["dropped"].append(np.asarray(dropped, np.float64).copy()
+                              if failures is not None else np.zeros(n))
+        out["retried"].append(np.asarray(retried, np.float64).copy()
+                              if failures is not None else np.zeros(n))
+        out["expired"].append(np.asarray(expired, np.float64).copy()
+                              if failures is not None else np.zeros(n))
+        out["recovery"].append(float(in_rec))
     return {k: np.asarray(v) for k, v in out.items()}

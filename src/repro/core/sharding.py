@@ -201,12 +201,16 @@ def grid_specs(
 ) -> tuple[tuple, PartitionSpec]:
     """(in_specs, out_spec) for one sharded streaming grid call.
 
-    ``in_specs`` covers ``(arrivals, fleet, workflow, capacity, wspec)`` —
-    pytree *prefixes*, so one spec serves every leaf of a stacked pytree.
-    ``wspec`` (a stacked ``WorkloadSpec``, the in-scan synthesis twin of the
-    arrivals tensor) always shards exactly like arrivals: its leaves carry
-    the same leading scenario/batch axes, just without the (S,) horizon
-    axis, which the arrivals prefix specs never constrain anyway.  With a
+    ``in_specs`` covers ``(arrivals, fleet, workflow, capacity, wspec,
+    fspec)`` — pytree *prefixes*, so one spec serves every leaf of a
+    stacked pytree.  ``wspec`` (a stacked ``WorkloadSpec``, the in-scan
+    synthesis twin of the arrivals tensor) always shards exactly like
+    arrivals: its leaves carry the same leading scenario/batch axes, just
+    without the (S,) horizon axis, which the arrivals prefix specs never
+    constrain anyway.  ``fspec`` (a ``FailureSpec``) is replicated except
+    under ``batch_axis="failure"``, where its stacked scenario axis shards
+    over ``data`` and the (shared) workload block over ``grid`` — the
+    chaos axis lays out exactly like the other batched sweep axes.  With a
     batch axis, the batch shards over ``data`` and the scenario axis over
     ``grid``; the plain ``sweep`` grid has only a scenario axis, which
     shards over the *flattened* (data × grid) plane so no device idles.
@@ -220,18 +224,20 @@ def grid_specs(
     pol = POLICY_AXIS if policy else None
     if batch_axis is None:
         both = (DATA_AXIS, GRID_AXIS)
-        return (P(both), P(), P(), P(), P(both)), P(pol, both)
+        return (P(both), P(), P(), P(), P(both), P()), P(pol, both)
     arrivals = {
         "fleet": P(DATA_AXIS, GRID_AXIS),   # (F, W, S, N): per-fleet columns
         "workflow": P(GRID_AXIS),           # (W, S, N): one shared block
         "capacity": P(GRID_AXIS),
+        "failure": P(GRID_AXIS),
     }[batch_axis]
     batched = P(DATA_AXIS)
     fleet = batched if batch_axis == "fleet" else P()
     workflow = batched if batch_axis == "workflow" else P()
     capacity = batched if batch_axis == "capacity" else P()
+    fspec = batched if batch_axis == "failure" else P()
     return (
-        (arrivals, fleet, workflow, capacity, arrivals),
+        (arrivals, fleet, workflow, capacity, arrivals, fspec),
         P(DATA_AXIS, pol, GRID_AXIS),
     )
 

@@ -68,8 +68,10 @@ import jax.numpy as jnp
 
 from repro.core import allocator as alloc
 from repro.core import capacity as cap_mod
+from repro.core import failures as fail_mod
 from repro.core.agents import Fleet, T4_PRICE_PER_HOUR
 from repro.core.capacity import CapacityConfig, billing_cost
+from repro.core.failures import FailureSpec
 from repro.core.routing import Workflow, check_workflow
 
 _EPS = 1e-9
@@ -152,6 +154,12 @@ class SimTrace:
     completed: jnp.ndarray = None  # (S, N) requests exiting the workflow
     warm: jnp.ndarray = None       # (S,) warm instances = g_total(t)
     pending: jnp.ndarray = None    # (S,) instances mid cold start
+    # Failure/robustness trajectories (zeros when nothing fails).
+    misrouted: jnp.ndarray = None  # (S, N) mass routed into inactive slots
+    dropped: jnp.ndarray = None    # (S, N) deadline drops (budget exhausted)
+    retried: jnp.ndarray = None    # (S, N) deadline-expired mass re-queued
+    expired: jnp.ndarray = None    # (S, N) SLO-violating mass (pre-retry)
+    recovery: jnp.ndarray = None   # (S,) post-outage backlog-drain indicator
 
     def __post_init__(self):
         if self.completed is None:
@@ -160,10 +168,17 @@ class SimTrace:
             self.warm = jnp.ones(self.served.shape[:-1], jnp.float32)
         if self.pending is None:
             self.pending = jnp.zeros(self.served.shape[:-1], jnp.float32)
+        for f in ("misrouted", "dropped", "retried", "expired"):
+            if getattr(self, f) is None:
+                setattr(self, f, jnp.zeros_like(self.served))
+        if self.recovery is None:
+            self.recovery = jnp.zeros(self.served.shape[:-1], jnp.float32)
 
     def tree_flatten(self):
         return (self.allocation, self.served, self.queue, self.latency,
-                self.arrivals, self.completed, self.warm, self.pending), None
+                self.arrivals, self.completed, self.warm, self.pending,
+                self.misrouted, self.dropped, self.retried, self.expired,
+                self.recovery), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -194,6 +209,12 @@ class SimSummary:
     utilization: float = 0.0            # Σ g / warm-instance-seconds
     cold_start_stall_time: float = 0.0  # backlogged seconds with pending pool
     mean_warm_instances: float = 0.0    # mean warm pool size
+    # Failure/robustness metrics; all 0 when nothing fails.
+    dropped: float = 0.0                # deadline drops / s (budget exhausted)
+    retried: float = 0.0                # deadline-expired mass re-queued / s
+    slo_violations: float = 0.0         # deadline-expired mass / s (pre-retry)
+    recovery_time: float = 0.0          # steps draining post-outage backlog
+    misrouted: float = 0.0              # mass lost to inactive route slots / s
 
     @classmethod
     def from_metrics(
@@ -224,6 +245,11 @@ class SimSummary:
             utilization=m["utilization"],
             cold_start_stall_time=m["cold_start_stall_time"],
             mean_warm_instances=m["mean_warm_instances"],
+            dropped=m["dropped"],
+            retried=m["retried"],
+            slo_violations=m["slo_violations"],
+            recovery_time=m["recovery_time"],
+            misrouted=m["misrouted"],
         )
 
 
@@ -283,13 +309,80 @@ def _queue_step(
     if route_eff is None:
         completed = served
         new_endo = jnp.zeros_like(served)
+        mis = jnp.zeros_like(served)
     else:
         completed = served * exit_frac  # row deficit exits the workflow
         # Routed mass arrives downstream next step; the active gate keeps
-        # padded slots inert even if a route column points at one (the
-        # misrouted mass is dropped, exactly like gated exogenous traffic).
-        new_endo = (served @ route_eff) * fleet.active
-    return served, new_queue, latency, completed, new_endo
+        # padded slots inert even if a route column points at one.  The
+        # misrouted mass is dropped, exactly like gated exogenous traffic —
+        # but it is *accounted*, so conservation stays checkable.
+        fwd = served @ route_eff
+        new_endo = fwd * fleet.active
+        mis = fwd * (1.0 - fleet.active)
+    return served, new_queue, latency, completed, new_endo, mis
+
+
+def _failure_queue_step(
+    queue: jnp.ndarray,
+    lam: jnp.ndarray,
+    g: jnp.ndarray,
+    fleet: Fleet,
+    config: SimConfig,
+    route_eff: jnp.ndarray | None,
+    exit_frac: jnp.ndarray | None,
+    failures: FailureSpec,
+    phi: jnp.ndarray,
+    up: jnp.ndarray,
+    retry_q: jnp.ndarray,
+):
+    """Failure-aware twin of ``_queue_step`` (only compiled when a
+    ``FailureSpec`` is passed — the ``failures=None`` program never sees it).
+
+    * **agent outage** (``up`` → 0): the agent's effective capacity is
+      zeroed (no reallocation — its share idles), the queue is preserved
+      and arrivals keep accumulating across the outage;
+    * **revocation** (``phi`` > 0): a ``phi`` fraction of warm capacity is
+      yanked mid-step — its in-service work drains back into the queue
+      (``served = served_raw · (1-phi)``, so the clawed-back mass stays in
+      ``new_queue`` by mass balance);
+    * **deadlines**: :func:`repro.core.failures.deadline_step` expires the
+      backlog beyond the deadline's worth of effective service, retrying
+      (class promotion, bounded by ``retry_budget``) or dropping it.
+
+    Returns ``(served, new_queue, latency, completed, new_endo, mis,
+    new_retry_q, dropped, retried, viol)``.  Mass balance per agent:
+    ``new_queue = queue + lam - served - dropped``.
+    """
+    capacity_rps = g * up * fleet.base_throughput
+    served_raw = jnp.minimum(capacity_rps, queue + lam)
+    served = served_raw * (1.0 - phi)
+    q_post = queue + lam - served
+    cap_eff = capacity_rps * (1.0 - phi)
+    new_queue, new_retry_q, dropped, retried, viol = fail_mod.deadline_step(
+        failures, queue, lam, served, q_post, cap_eff, retry_q, eps=_EPS
+    )
+    # The drop accounting can leave a roundoff residue where the true
+    # post-drop queue is exactly zero.  Snap it to an exact zero (and gate
+    # the clipped-latency cliff on the same dead band) so the f32 kernel
+    # and the f64 oracle cannot land on opposite sides of a queue>0 branch
+    # — discrete allocators (throughput_greedy) chase any positive demand,
+    # and the 0-vs-latency_cap latency boundary is a 1000x cliff.  The
+    # snapped mass is bounded by the dead band per agent-step.
+    new_queue = new_queue * (new_queue > 1e-4)
+    latency = jnp.minimum(
+        new_queue / jnp.maximum(cap_eff, _EPS), config.latency_cap
+    ) * (new_queue > 1e-4)
+    if route_eff is None:
+        completed = served
+        new_endo = jnp.zeros_like(served)
+        mis = jnp.zeros_like(served)
+    else:
+        completed = served * exit_frac
+        fwd = served @ route_eff
+        new_endo = fwd * fleet.active
+        mis = fwd * (1.0 - fleet.active)
+    return (served, new_queue, latency, completed, new_endo, mis,
+            new_retry_q, dropped, retried, viol)
 
 
 def simulate_core(
@@ -300,6 +393,7 @@ def simulate_core(
     policy_names: Sequence[str] | None = None,
     workflow: Workflow | None = None,
     capacity: CapacityConfig | None = None,
+    failures: FailureSpec | None = None,
 ) -> SimTrace:
     """Pure scan body — jit/vmap-able over ``policy_id``, ``arrivals``, the
     ``fleet`` pytree, the ``workflow`` pytree and the ``capacity`` pytree
@@ -321,13 +415,25 @@ def simulate_core(
     With ``capacity=None`` the budget stays a python float — the literal
     pre-capacity program — which the ``fixed``/zero-cold-start capacity path
     must reproduce bit-for-bit (tests/test_capacity.py).
+
+    ``failures`` injects revocation / agent-outage / deadline dynamics
+    (``core/failures.py``): the chain state rides the carry, the physics
+    switch to ``_failure_queue_step``, and the trace grows the
+    dropped/retried/expired/misrouted/recovery trajectories.  The
+    ``failures=None`` branch is resolved in *python*, so the no-failure
+    program is structurally the pre-failure program — bit-for-bit, not
+    merely numerically close (tests/test_failures.py).
     """
     names = alloc.policy_names() if policy_names is None else tuple(policy_names)
     n = fleet.num_agents
     route_eff, exit_frac, arrivals, _ = _routing_terms(workflow, fleet, arrivals)
     elastic = capacity is not None
+    failing = failures is not None
 
     def step(carry, inp):
+        if failing:
+            fstate = carry[-1]
+            carry = carry[:-1]
         if elastic:
             queue, lam_ema, endo, cstate = carry
         else:
@@ -348,15 +454,60 @@ def simulate_core(
         g = alloc.policy_switch(
             policy_id, t, lam, lam_ema, queue, fleet, g_total_t, names
         )
-        served, new_queue, latency, completed, new_endo = _queue_step(
-            queue, lam, g, fleet, config, route_eff, exit_frac
-        )
+        if failing:
+            u_rev, u_down = fail_mod.failure_uniforms(failures, t, n)
+            phi, avail, rev_nxt, down_nxt = fail_mod.advance_failures(
+                failures, t, fstate.rev_on, fstate.down, u_rev, u_down
+            )
+            fail_t = jnp.maximum(
+                (phi > 0).astype(jnp.float32),
+                (((1.0 - avail) * fleet.active) > 0.5).any().astype(jnp.float32),
+            )
+            pre_q_tot = (queue * fleet.active).sum(-1)
+            onset = fail_t * (1.0 - fstate.fail_prev) * (1.0 - fstate.recovering)
+            q_mark = jnp.where(onset > 0, pre_q_tot, fstate.q_mark)
+            (served, new_queue, latency, completed, new_endo, mis,
+             new_retry_q, dropped, retried, viol) = _failure_queue_step(
+                queue, lam, g, fleet, config, route_eff, exit_frac,
+                failures, phi, avail, fstate.retry_q,
+            )
+            # Recovery bookkeeping: once the failure clears, count the steps
+            # until the backlog drains back under its pre-outage watermark.
+            new_q_tot = (new_queue * fleet.active).sum(-1)
+            in_rec = (1.0 - fail_t) * jnp.maximum(fstate.fail_prev,
+                                                  fstate.recovering)
+            recovering = jnp.where(
+                fail_t > 0, fstate.recovering,
+                in_rec * (new_q_tot > q_mark).astype(jnp.float32),
+            )
+            fstate = fail_mod.FailureState(
+                rev_on=rev_nxt, down=down_nxt, fail_prev=fail_t,
+                recovering=recovering, q_mark=q_mark, retry_q=new_retry_q,
+            )
+            if elastic:
+                # Revoked instances leave the warm pool: the autoscaler must
+                # re-provision them through the cold-start pipeline.
+                cstate = cap_mod.CapacityState(
+                    cstate.warm * (1.0 - phi), cstate.pipeline, cstate.idle_s
+                )
+        else:
+            served, new_queue, latency, completed, new_endo, mis = _queue_step(
+                queue, lam, g, fleet, config, route_eff, exit_frac
+            )
         warm_t = jnp.asarray(g_total_t, jnp.float32)
+        if failing:
+            # Billing excludes revoked instance-seconds: the yanked share
+            # of the pool is not warm capacity for this step.
+            warm_t = warm_t * (1.0 - phi)
         new_carry = (
             (new_queue, lam_ema, new_endo, cstate) if elastic
             else (new_queue, lam_ema, new_endo)
         )
-        return new_carry, (g, served, new_queue, latency, completed, warm_t, pending_t)
+        out = (g, served, new_queue, latency, completed, warm_t, pending_t, mis)
+        if failing:
+            new_carry = new_carry + (fstate,)
+            out = out + (dropped, retried, viol, in_rec)
+        return new_carry, out
 
     num_steps = arrivals.shape[0]
     ts = jnp.arange(num_steps)
@@ -367,10 +518,16 @@ def simulate_core(
     )
     if elastic:
         init = init + (cap_mod.init_capacity_state(config.g_total),)
-    _, (g, served, queue, latency, completed, warm, pending) = jax.lax.scan(
-        step, init, (ts, arrivals)
-    )
-    return SimTrace(g, served, queue, latency, arrivals, completed, warm, pending)
+    if failing:
+        init = init + (fail_mod.init_failure_state(n),)
+    _, outs = jax.lax.scan(step, init, (ts, arrivals))
+    g, served, queue, latency, completed, warm, pending, mis = outs[:8]
+    if failing:
+        dropped, retried, viol, recovery = outs[8:]
+    else:
+        dropped = retried = viol = recovery = None
+    return SimTrace(g, served, queue, latency, arrivals, completed, warm,
+                    pending, mis, dropped, retried, viol, recovery)
 
 
 # ``Fleet``, ``Workflow`` and ``CapacityConfig`` are registered pytrees
@@ -386,18 +543,28 @@ def simulate(
     config: SimConfig = SimConfig(),
     workflow: Workflow | None = None,
     capacity: CapacityConfig | None = None,
+    failures: FailureSpec | None = None,
 ) -> SimTrace:
     """Run one registered policy over an (S, N) arrival matrix, optionally
-    routing served requests through a ``Workflow`` topology and/or scaling
-    the warm pool with a ``CapacityConfig`` autoscaler."""
+    routing served requests through a ``Workflow`` topology, scaling the
+    warm pool with a ``CapacityConfig`` autoscaler, and/or injecting
+    failures from a ``FailureSpec`` chaos scenario."""
     fleet.validate()
     if workflow is not None:
         check_workflow(workflow, fleet.num_agents)
     if capacity is not None:
         cap_mod.check_capacity(capacity, config.g_total, config.num_gpus)
+    failures = fail_mod.resolve_failures(failures)
+    if failures is not None:
+        fail_mod.check_failures(failures)
+        if failures.batched:
+            raise ValueError(
+                "simulate() takes a single FailureSpec; batched (stacked) "
+                "specs only flow through sweep(..., failures=[...])"
+            )
     return _simulate_jit(
         jnp.asarray(alloc.policy_id(policy)), arrivals, fleet, config,
-        alloc.policy_names(), workflow, capacity,
+        alloc.policy_names(), workflow, capacity, failures,
     )
 
 
@@ -413,6 +580,7 @@ def simulate_stream_core(
     policy_block: jnp.ndarray | None = None,
     block_size: int | None = None,
     gen_name: str | None = None,
+    failures: FailureSpec | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused streaming scan: every named policy's trajectory AND its metric
     reductions in ONE pass, materializing no per-step traces.
@@ -503,6 +671,7 @@ def simulate_stream_core(
         workflow, fleet, arrivals
     )
     elastic = capacity is not None
+    failing = failures is not None
     if elastic:
         # vmap over the policy rows only; the config itself is shared.  The
         # inner ``lax.switch`` keeps its unbatched index, so no branch blowup.
@@ -520,9 +689,12 @@ def simulate_stream_core(
 
     def step_body(carry, t, lam_exo):
         # One streaming step on the workload-state-free carry:
-        # (queue, lam_ema, endo, acc[, cstate]).
+        # (queue, lam_ema, endo, acc[, cstate][, fstate]).
         queue, lam_ema, endo, acc = carry[:4]
         rest = carry[4:]
+        if failing:
+            fstate = rest[-1]
+            rest = rest[:-1]
         lam = lam_exo + endo            # (P, N) total intake per policy row
         lam_ema = jnp.where(
             t > 0, alloc.ema_forecast(lam_ema, lam, config.ema_alpha), lam_ema
@@ -537,15 +709,59 @@ def simulate_stream_core(
             g_total_t = config.g_total  # static python float: the pre-capacity program
             pending_t = jnp.zeros((p,), jnp.float32)
         g = dispatch(t, lam, lam_ema, queue, g_total_t)
-        served, new_queue, latency, completed, new_endo = _queue_step(
-            queue, lam, g, fleet, config, route_eff, exit_frac
-        )
+        if failing:
+            # The chains are exogenous — one draw shared by every policy
+            # row; only the per-policy bookkeeping carries a (P,) axis.
+            u_rev, u_down = fail_mod.failure_uniforms(failures, t, n)
+            phi, avail, rev_nxt, down_nxt = fail_mod.advance_failures(
+                failures, t, fstate.rev_on, fstate.down, u_rev, u_down
+            )
+            fail_t = jnp.maximum(
+                (phi > 0).astype(jnp.float32),
+                (((1.0 - avail) * fleet.active) > 0.5).any().astype(jnp.float32),
+            )
+            pre_q_tot = (queue * fleet.active).sum(-1)          # (P,)
+            onset = fail_t * (1.0 - fstate.fail_prev) * (1.0 - fstate.recovering)
+            q_mark = jnp.where(onset > 0, pre_q_tot, fstate.q_mark)
+            (served, new_queue, latency, completed, new_endo, mis,
+             new_retry_q, dropped, retried, viol) = _failure_queue_step(
+                queue, lam, g, fleet, config, route_eff, exit_frac,
+                failures, phi, avail, fstate.retry_q,
+            )
+            new_q_tot = (new_queue * fleet.active).sum(-1)
+            in_rec = (1.0 - fail_t) * jnp.maximum(fstate.fail_prev,
+                                                  fstate.recovering)
+            recovering = jnp.where(
+                fail_t > 0, fstate.recovering,
+                in_rec * (new_q_tot > q_mark).astype(jnp.float32),
+            )
+            fstate = fail_mod.FailureState(
+                rev_on=rev_nxt, down=down_nxt, fail_prev=fail_t,
+                recovering=recovering, q_mark=q_mark, retry_q=new_retry_q,
+            )
+            if elastic:
+                cstate = cap_mod.CapacityState(
+                    cstate.warm * (1.0 - phi), cstate.pipeline, cstate.idle_s
+                )
+                rest = rest[:-1] + (cstate,)
+        else:
+            served, new_queue, latency, completed, new_endo, mis = _queue_step(
+                queue, lam, g, fleet, config, route_eff, exit_frac
+            )
+            dropped = retried = viol = in_rec = None
         warm_t = jnp.broadcast_to(jnp.asarray(g_total_t, jnp.float32), (p,))
+        if failing:
+            # Billing excludes revoked instance-seconds (as in simulate_core).
+            warm_t = warm_t * (1.0 - phi)
         acc = accumulate_metrics(
             acc, fleet.active, g, served, new_queue, latency, completed,
-            warm_t, pending_t,
+            warm_t, pending_t, misrouted=mis, dropped=dropped,
+            retried=retried, viol=viol, recovery=in_rec,
         )
-        return (new_queue, lam_ema, new_endo, acc) + rest
+        out = (new_queue, lam_ema, new_endo, acc) + rest
+        if failing:
+            out = out + (fstate,)
+        return out
 
     def step(carry, inp):
         # Single-level (block_size=1) scan body: per-step synthesis inline.
@@ -588,6 +804,10 @@ def simulate_stream_core(
             lambda x: jnp.broadcast_to(x, (p,) + x.shape),
             cap_mod.init_capacity_state(config.g_total),
         ),)
+    if failing:
+        # fstate rides LAST in the carry: the chains (rev_on/down/fail_prev)
+        # are shared across policy rows, the bookkeeping is per-policy.
+        init = init + (fail_mod.init_failure_state(n, (p,)),)
     bsz = resolve_block_size(block_size)
     if bsz == 1:
         carry, _ = jax.lax.scan(step, init, ts if synth else (ts, arrivals))
@@ -703,6 +923,13 @@ METRIC_NAMES = (
     "utilization",
     "cold_start_stall_time",
     "mean_warm_instances",
+    # Failure/robustness metrics (PR 10) — appended at the end so
+    # index-based consumers of the original twelve keep working.
+    "dropped",
+    "retried",
+    "slo_violations",
+    "recovery_time",
+    "misrouted",
 )
 
 
@@ -746,13 +973,19 @@ class MetricAccum(NamedTuple):
     alloc_sum: jnp.ndarray      # (...,)   Σ_t Σ_i g_i
     warm_sum: jnp.ndarray       # (...,)   Σ_t warm(t) — warm-instance-seconds
     stall_steps: jnp.ndarray    # (...,)   steps with pending > 0 and backlog
+    dropped_sum: jnp.ndarray    # (...,)   Σ_t Σ_i deadline drops
+    retried_sum: jnp.ndarray    # (...,)   Σ_t Σ_i re-queued expired mass
+    viol_sum: jnp.ndarray       # (...,)   Σ_t Σ_i deadline-expired mass
+    misrouted_sum: jnp.ndarray  # (...,)   Σ_t Σ_i mass lost to inactive slots
+    recovery_steps: jnp.ndarray # (...,)   steps draining post-outage backlog
 
 
 def init_metric_accum(num_agents: int, batch_shape: tuple = ()) -> MetricAccum:
     """Zero accumulator for ``batch_shape`` cells of ``num_agents`` agents."""
     agent = jnp.zeros(batch_shape + (num_agents,), jnp.float32)
     scalar = jnp.zeros(batch_shape, jnp.float32)
-    return MetricAccum(agent, agent, agent, agent, scalar, scalar, scalar)
+    return MetricAccum(agent, agent, agent, agent, scalar, scalar, scalar,
+                       scalar, scalar, scalar, scalar, scalar)
 
 
 def accumulate_metrics(
@@ -765,9 +998,18 @@ def accumulate_metrics(
     completed: jnp.ndarray,
     warm: jnp.ndarray,
     pending: jnp.ndarray,
+    misrouted: jnp.ndarray | None = None,
+    dropped: jnp.ndarray | None = None,
+    retried: jnp.ndarray | None = None,
+    viol: jnp.ndarray | None = None,
+    recovery: jnp.ndarray | None = None,
 ) -> MetricAccum:
-    """Fold one step's outputs into the running sums (O(N) work/memory)."""
+    """Fold one step's outputs into the running sums (O(N) work/memory).
+
+    The failure-side inputs default to ``None`` — contributing nothing —
+    so the no-failure program folds exactly the same sums as before."""
     backlogged = (queue * mask).sum(axis=-1) > 0
+    msum = lambda x: 0.0 if x is None else (x * mask).sum(axis=-1)
     return MetricAccum(
         lat_sum=acc.lat_sum + latency,
         served_sum=acc.served_sum + served,
@@ -777,6 +1019,12 @@ def accumulate_metrics(
         warm_sum=acc.warm_sum + warm,
         stall_steps=acc.stall_steps
         + ((pending > 0) & backlogged).astype(jnp.float32),
+        dropped_sum=acc.dropped_sum + msum(dropped),
+        retried_sum=acc.retried_sum + msum(retried),
+        viol_sum=acc.viol_sum + msum(viol),
+        misrouted_sum=acc.misrouted_sum + msum(misrouted),
+        recovery_steps=acc.recovery_steps
+        + (0.0 if recovery is None else recovery),
     )
 
 
@@ -822,6 +1070,11 @@ def finalize_metrics(
         acc.alloc_sum / jnp.maximum(acc.warm_sum, _EPS),
         acc.stall_steps,
         acc.warm_sum / num_steps,
+        acc.dropped_sum / num_steps,
+        acc.retried_sum / num_steps,
+        acc.viol_sum / num_steps,
+        acc.recovery_steps,
+        acc.misrouted_sum / num_steps,
     ])
     return vec, per_lat, per_tput, per_queue
 
@@ -859,6 +1112,7 @@ def trace_metrics(
     """
     m = jnp.ones(trace.latency.shape[-1]) if active is None else active
     backlogged = (trace.queue * m).sum(axis=-1) > 0
+    msum = lambda x: (x * m).sum(axis=-1).sum(axis=-1)
     acc = MetricAccum(
         lat_sum=trace.latency.sum(axis=0),
         served_sum=trace.served.sum(axis=0),
@@ -867,6 +1121,11 @@ def trace_metrics(
         alloc_sum=trace.allocation.sum(axis=-1).sum(axis=-1),
         warm_sum=trace.warm.sum(axis=0),  # 1 s steps: Σ_t warm(t) · 1 s
         stall_steps=((trace.pending > 0) & backlogged).sum().astype(jnp.float32),
+        dropped_sum=msum(trace.dropped),
+        retried_sum=msum(trace.retried),
+        viol_sum=msum(trace.expired),
+        misrouted_sum=msum(trace.misrouted),
+        recovery_steps=trace.recovery.sum(axis=0),
     )
     return finalize_metrics(
         acc, trace.latency.shape[0], active, workflow, config=config
@@ -897,10 +1156,11 @@ def run_policy(
     config: SimConfig = SimConfig(),
     workflow: Workflow | None = None,
     capacity: CapacityConfig | None = None,
+    failures: FailureSpec | None = None,
 ) -> SimSummary:
     return summarize(
         policy,
-        simulate(policy, arrivals, fleet, config, workflow, capacity),
+        simulate(policy, arrivals, fleet, config, workflow, capacity, failures),
         config,
         fleet.active,
         workflow,

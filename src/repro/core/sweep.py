@@ -82,6 +82,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import allocator as alloc
+from repro.core import failures as fail_mod
 from repro.core import sharding
 from repro.core.sharding import grid_mesh  # re-export: the cached 2D mesh
 from repro.core import routing
@@ -209,7 +210,8 @@ class SweepSummary:
         si = self.columns.index("scenario")
         pi = self.columns.index("policy")
         fi = next(
-            (self.columns.index(c) for c in ("fleet", "workflow", "capacity")
+            (self.columns.index(c)
+             for c in ("fleet", "workflow", "capacity", "failure")
              if c in self.columns),
             None,
         )
@@ -250,6 +252,7 @@ class SweepResult:
     workflow_names: tuple[str, ...] | None = None
     capacity_names: tuple[str, ...] | None = None
     per_agent_queue: np.ndarray | None = None  # ([F|K|C,] P, W, N) per-stage backlog
+    failure_names: tuple[str, ...] | None = None
 
     def _leading_axis(self) -> tuple[str, tuple[str, ...]] | None:
         if self.fleet_names is not None:
@@ -258,6 +261,8 @@ class SweepResult:
             return "workflow", self.workflow_names
         if self.capacity_names is not None:
             return "capacity", self.capacity_names
+        if self.failure_names is not None:
+            return "failure", self.failure_names
         return None
 
     def metric(self, name: str) -> np.ndarray:
@@ -270,11 +275,13 @@ class SweepResult:
         fleet: str | None,
         workflow: str | None = None,
         capacity: str | None = None,
+        failure: str | None = None,
     ):
         p = self.policy_names.index(policy)
         w = self.scenario_names.index(scenario)
         lead = self._leading_axis()
-        picked = {"fleet": fleet, "workflow": workflow, "capacity": capacity}
+        picked = {"fleet": fleet, "workflow": workflow, "capacity": capacity,
+                  "failure": failure}
         if lead is None:
             bad = [k for k, v in picked.items() if v is not None]
             if bad:
@@ -295,9 +302,12 @@ class SweepResult:
         fleet: str | None = None,
         workflow: str | None = None,
         capacity: str | None = None,
+        failure: str | None = None,
     ) -> SimSummary:
         """One cell as a ``SimSummary`` — same fields as ``run_policy``."""
-        idx = self._cell_index(policy, scenario, fleet, workflow, capacity)
+        idx = self._cell_index(
+            policy, scenario, fleet, workflow, capacity, failure
+        )
         m = dict(zip(METRIC_NAMES, (float(x) for x in self.metrics[idx])))
         per_queue = (
             () if self.per_agent_queue is None else self.per_agent_queue[idx]
@@ -333,6 +343,7 @@ def _grid_jit(
     fleet: Fleet,            # leaves (N,), or (F, N) when batch_axis="fleet"
     workflow: Workflow | None,  # leaves (K, N, N)/(K, N) when batch_axis="workflow"
     capacity: CapacityConfig | None,  # leaves (C,) when batch_axis="capacity"
+    fspec,                   # FailureSpec | None; leaves (B,) when batch_axis="failure"
     config: SimConfig,
     reg_names: tuple,
     keep_traces: bool,
@@ -349,11 +360,14 @@ def _grid_jit(
     ``batch_axis`` picks the outermost vmapped dimension: None (plain
     ``sweep``), "fleet" (batched fleet leaves + matched per-fleet arrival
     columns), "workflow" (batched routing topologies over one shared
-    scenario block), or "capacity" (batched warm-pool autoscaler configs).
+    scenario block), "capacity" (batched warm-pool autoscaler configs), or
+    "failure" (stacked chaos scenarios over one shared workload block).
     """
 
-    def cell(fl, wf, cp, pid, arr):
-        trace = simulate_core(pid, arr, fl, config, reg_names, wf, cp)
+    def cell(fl, wf, cp, fs, pid, arr):
+        trace = simulate_core(
+            pid, arr, fl, config, reg_names, wf, cp, failures=fs
+        )
         vec, per_lat, per_tput, per_q = trace_metrics(
             trace, fl.active, wf, config=config
         )
@@ -361,17 +375,18 @@ def _grid_jit(
             return vec, per_lat, per_tput, per_q, trace
         return vec, per_lat, per_tput, per_q
 
-    over_scen = jax.vmap(cell, in_axes=(None, None, None, None, 0))
-    over_pol = jax.vmap(over_scen, in_axes=(None, None, None, 0, None))
+    over_scen = jax.vmap(cell, in_axes=(None, None, None, None, None, 0))
+    over_pol = jax.vmap(over_scen, in_axes=(None, None, None, None, 0, None))
     if batch_axis is None:
-        return over_pol(fleet, workflow, capacity, pids, arrivals)
+        return over_pol(fleet, workflow, capacity, fspec, pids, arrivals)
     outer_axes = {
-        "fleet": (0, None, None, None, 0),
-        "workflow": (None, 0, None, None, None),
-        "capacity": (None, None, 0, None, None),
+        "fleet": (0, None, None, None, None, 0),
+        "workflow": (None, 0, None, None, None, None),
+        "capacity": (None, None, 0, None, None, None),
+        "failure": (None, None, None, 0, None, None),
     }[batch_axis]
     return jax.vmap(over_pol, in_axes=outer_axes)(
-        fleet, workflow, capacity, pids, arrivals
+        fleet, workflow, capacity, fspec, pids, arrivals
     )
 
 
@@ -414,6 +429,7 @@ def _stream_grid(
     workflow: Workflow | None,  # leaves (K, N, N)/(K, N) when batch_axis="workflow"
     capacity: CapacityConfig | None,  # leaves (C,) when batch_axis="capacity"
     wspec=None,              # stacked WorkloadSpec, leaves (W, ·)/(F, W, ·)
+    fspec=None,              # FailureSpec | None; leaves (B,) when batch_axis="failure"
     config: SimConfig = None,
     names: tuple = (),
     batch_axis: str | None = None,
@@ -457,11 +473,11 @@ def _stream_grid(
         if num_policy_blocks > 1 else None
     )
 
-    def cell(arr, fl, wf, cp, sp, gen_name=None):
+    def cell(arr, fl, wf, cp, sp, fs, gen_name=None):
         return simulate_stream_core(
             arr, fl, config, names, wf, cp, workload_spec=sp,
             num_policy_blocks=num_policy_blocks, policy_block=block,
-            block_size=block_size, gen_name=gen_name,
+            block_size=block_size, gen_name=gen_name, failures=fs,
         )
 
     a_ax = None if arrivals is None else 0
@@ -469,11 +485,12 @@ def _stream_grid(
 
     # out_axes=1: the per-cell policy axis stays leading, scenarios second,
     # matching the trace kernel's (…, P, W, ·) layout.
-    def over_scen(arr, fl, wf, cp, sp):
+    def over_scen(arr, fl, wf, cp, sp, fs):
         if gen_groups is None or sp is None:
             return jax.vmap(
-                cell, in_axes=(a_ax, None, None, None, s_ax), out_axes=1
-            )(arr, fl, wf, cp, sp)
+                cell, in_axes=(a_ax, None, None, None, s_ax, None),
+                out_axes=1,
+            )(arr, fl, wf, cp, sp, fs)
         # Grouped static dispatch (``synth_gen_groups``): one vmap per
         # generator group, each synthesizing through its generator
         # directly — no vmapped ``lax.switch``, so no
@@ -488,8 +505,8 @@ def _stream_grid(
             )
             outs.append(jax.vmap(
                 functools.partial(cell, gen_name=gname),
-                in_axes=(None, None, None, None, 0), out_axes=1,
-            )(None, fl, wf, cp, sub))
+                in_axes=(None, None, None, None, 0, None), out_axes=1,
+            )(None, fl, wf, cp, sub, fs))
             order.extend(idx)
         inv = np.argsort(np.asarray(order))
         return jax.tree_util.tree_map(
@@ -497,14 +514,15 @@ def _stream_grid(
         )
 
     if batch_axis is None:
-        return over_scen(arrivals, fleet, workflow, capacity, wspec)
+        return over_scen(arrivals, fleet, workflow, capacity, wspec, fspec)
     outer_axes = {
-        "fleet": (a_ax, 0, None, None, s_ax),
-        "workflow": (None, None, 0, None, None),
-        "capacity": (None, None, None, 0, None),
+        "fleet": (a_ax, 0, None, None, s_ax, None),
+        "workflow": (None, None, 0, None, None, None),
+        "capacity": (None, None, None, 0, None, None),
+        "failure": (None, None, None, None, None, 0),
     }[batch_axis]
     return jax.vmap(over_scen, in_axes=outer_axes)(
-        arrivals, fleet, workflow, capacity, wspec
+        arrivals, fleet, workflow, capacity, wspec, fspec
     )
 
 
@@ -531,6 +549,7 @@ def _stream_grid_sharded(
     workflow: Workflow | None,
     capacity: CapacityConfig | None,
     wspec,
+    fspec,
     mesh: jax.sharding.Mesh,
     config: SimConfig,
     names: tuple,
@@ -571,7 +590,7 @@ def _stream_grid_sharded(
     return shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
         check_rep=False,
-    )(arrivals, fleet, workflow, capacity, wspec)
+    )(arrivals, fleet, workflow, capacity, wspec, fspec)
 
 
 def _run_stream_sharded(
@@ -583,6 +602,7 @@ def _run_stream_sharded(
     names: tuple,
     batch_axis: str | None,
     wspec=None,
+    fspec=None,
     policy_devices: int = 1,
     block_size: int = 1,
 ):
@@ -620,8 +640,8 @@ def _run_stream_sharded(
         w = arrivals.shape[0] if wspec is None else wspec.gen_id.shape[0]
         pad([(0, dd * dg)])
         out = _stream_grid_sharded(
-            arrivals, fleet, workflow, capacity, wspec, mesh, config, names,
-            batch_axis, dp, block_size,
+            arrivals, fleet, workflow, capacity, wspec, fspec, mesh, config,
+            names, batch_axis, dp, block_size,
         )
         return tuple(x[:p, :w] for x in out)
     if batch_axis == "fleet":
@@ -635,14 +655,19 @@ def _run_stream_sharded(
         w = arrivals.shape[0] if wspec is None else wspec.gen_id.shape[0]
         pad([(0, dg)])
         workflow = sharding.pad_tree_axis(workflow, 0, dd)
+    elif batch_axis == "failure":
+        b = fspec.revoke_frac.shape[0]
+        w = arrivals.shape[0] if wspec is None else wspec.gen_id.shape[0]
+        pad([(0, dg)])
+        fspec = sharding.pad_tree_axis(fspec, 0, dd)
     else:
         b = capacity.policy_id.shape[0]
         w = arrivals.shape[0] if wspec is None else wspec.gen_id.shape[0]
         pad([(0, dg)])
         capacity = sharding.pad_tree_axis(capacity, 0, dd)
     out = _stream_grid_sharded(
-        arrivals, fleet, workflow, capacity, wspec, mesh, config, names,
-        batch_axis, dp, block_size,
+        arrivals, fleet, workflow, capacity, wspec, fspec, mesh, config,
+        names, batch_axis, dp, block_size,
     )
     return tuple(x[:b, :p, :w] for x in out)
 
@@ -661,6 +686,7 @@ def _run_grid(
     batch_axis: str | None,
     shard: bool | None = None,
     wspec=None,
+    fspec=None,
     block_size: int | None = None,
 ):
     """Pick the kernel and placement for one sweep call: streaming by
@@ -696,13 +722,14 @@ def _run_grid(
         if sharded:
             return _run_stream_sharded(
                 arrivals, fleet, workflow, capacity, config, names,
-                batch_axis, wspec=wspec,
+                batch_axis, wspec=wspec, fspec=fspec,
                 policy_devices=sharding.policy_mesh_devices(shard),
                 block_size=bsz,
             )
         return _stream_grid_jit(
-            arrivals, fleet, workflow, capacity, wspec, config, names,
-            batch_axis, block_size=bsz, gen_groups=synth_gen_groups(wspec),
+            arrivals, fleet, workflow, capacity, wspec, fspec, config,
+            names, batch_axis, block_size=bsz,
+            gen_groups=synth_gen_groups(wspec),
         )
     if sharded and batch_axis == "fleet":
         # The parity oracle keeps the pre-shard_map layout-hint path: pad
@@ -713,14 +740,14 @@ def _run_grid(
         f = arrivals.shape[0]
         fleet, arrivals = _shard_fleet_axis(fleet, arrivals)
         out = _grid_jit(
-            pids, arrivals, fleet, workflow, capacity, config, reg_names,
-            keep_traces, batch_axis,
+            pids, arrivals, fleet, workflow, capacity, fspec, config,
+            reg_names, keep_traces, batch_axis,
         )
         return tuple(
             jax.tree_util.tree_map(lambda x: x[:f], o) for o in out
         )
     return _grid_jit(
-        pids, arrivals, fleet, workflow, capacity, config, reg_names,
+        pids, arrivals, fleet, workflow, capacity, fspec, config, reg_names,
         keep_traces, batch_axis,
     )
 
@@ -790,6 +817,41 @@ def _streamed(keep_traces: bool, stream: bool | None) -> bool:
     return (not keep_traces) if stream is None else bool(stream)
 
 
+def _resolve_failure_axis(failures, allow_batch: bool):
+    """Resolve one sweep call's ``failures=`` argument.
+
+    Returns ``(fspec, failure_names)``: a single validated spec (or None)
+    with no axis, or — on the plain ``sweep`` only (``allow_batch``) — a
+    stacked spec plus its scenario names, the vmapped chaos axis.  The
+    ``REPRO_FAILURES=0`` kill switch applies before anything else.
+    """
+    if isinstance(failures, fail_mod.FailureSpec) or failures is None:
+        failures = fail_mod.resolve_failures(failures)
+        if failures is None:
+            return None, None
+        if failures.batched:
+            raise ValueError(
+                "pass a sequence of FailureSpec rows (not a pre-stacked "
+                "spec) to put failures on the sweep axis"
+            )
+        fail_mod.check_failures(failures)
+        return failures, None
+    specs = list(failures)
+    if not allow_batch:
+        raise ValueError(
+            "only the plain sweep() supports a failure axis; "
+            "sweep_fleets/sweep_workflows/sweep_capacity already batch "
+            "their own axis — pass a single FailureSpec"
+        )
+    if not specs:
+        raise ValueError("need at least one failure scenario")
+    for s in specs:
+        fail_mod.check_failures(s)
+    if not fail_mod.failures_env_enabled():
+        return None, None
+    return fail_mod.stack_failures(specs), tuple(s.name for s in specs)
+
+
 def sweep(
     fleet: Fleet,
     scenarios: Sequence[Scenario],
@@ -802,6 +864,7 @@ def sweep(
     shard: bool | None = None,
     synthesize: bool | None = None,
     block_size: int | None = None,
+    failures=None,
 ) -> SweepResult | tuple:
     """Evaluate ``policies`` (default: the whole registry) × ``scenarios``.
 
@@ -837,10 +900,20 @@ def sweep(
     compile cost for steady-state throughput (see
     ``simulate_stream_core``).  The same knob threads through every
     sweep entry point, sharded or not.
+
+    ``failures`` injects chaos (``core/failures.py``): a single
+    ``FailureSpec`` applies to every cell, while a *sequence* of specs
+    (e.g. ``failure_scenario_library()``) becomes a vmapped **failure
+    axis** — the grid grows a leading chaos dimension exactly like the
+    fleet/workflow/capacity axes of the other entry points, and the
+    result carries ``failure_names``.  ``failures=None`` is bit-for-bit
+    the pre-failure program; ``REPRO_FAILURES=0`` forces that path.
     """
     fleet.validate()
     if capacity is not None:
         check_capacity(capacity, config.g_total, config.num_gpus)
+    fspec, failure_names = _resolve_failure_axis(failures, allow_batch=True)
+    batch_axis = None if failure_names is None else "failure"
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
@@ -849,8 +922,9 @@ def sweep(
     )  # (W, S, N) | stacked spec
 
     out = _run_grid(pids, arrivals, fleet, None, capacity, config,
-                       reg_names, names, keep_traces, stream, None, shard,
-                       wspec=wspec, block_size=block_size)
+                       reg_names, names, keep_traces, stream, batch_axis,
+                       shard, wspec=wspec, fspec=fspec,
+                       block_size=block_size)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -865,6 +939,7 @@ def sweep(
         config=config,
         traces=traces,
         per_agent_queue=per_q,
+        failure_names=failure_names,
     )
 
 
@@ -882,6 +957,7 @@ def sweep_fleets(
     return_arrays: bool = False,
     synthesize: bool | None = None,
     block_size: int | None = None,
+    failures=None,
 ) -> SweepResult | tuple:
     """One jitted (fleet × policy × scenario) grid over heterogeneous fleets.
 
@@ -958,13 +1034,14 @@ def sweep_fleets(
                 for row in spec_rows
             ])  # the parity arm: same step functions, host-scanned
 
+    fspec, _ = _resolve_failure_axis(failures, allow_batch=False)
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
     out = _run_grid(pids, arrivals, stacked, None, None, config,
                        reg_names, names, keep_traces, stream, "fleet", shard,
-                       wspec=wspec, block_size=block_size)
+                       wspec=wspec, fspec=fspec, block_size=block_size)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -1016,6 +1093,7 @@ def sweep_workflows(
     shard: bool | None = None,
     synthesize: bool | None = None,
     block_size: int | None = None,
+    failures=None,
 ) -> SweepResult | tuple:
     """One jitted (workflow × policy × scenario) grid over one fleet.
 
@@ -1055,13 +1133,15 @@ def sweep_workflows(
         scenarios, synthesize, _streamed(keep_traces, stream)
     )  # (W, S, N) | stacked spec
 
+    fspec, _ = _resolve_failure_axis(failures, allow_batch=False)
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
     out = _run_grid(pids, arrivals, fleet, stacked_wf, None, config,
                        reg_names, names, keep_traces, stream, "workflow",
-                       shard, wspec=wspec, block_size=block_size)
+                       shard, wspec=wspec, fspec=fspec,
+                       block_size=block_size)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])
@@ -1133,6 +1213,7 @@ def sweep_capacity(
     shard: bool | None = None,
     synthesize: bool | None = None,
     block_size: int | None = None,
+    failures=None,
 ) -> SweepResult | tuple:
     """One jitted (capacity × policy × scenario) grid over one fleet.
 
@@ -1172,13 +1253,15 @@ def sweep_capacity(
         scenarios, synthesize, _streamed(keep_traces, stream)
     )  # (W, S, N) | stacked spec
 
+    fspec, _ = _resolve_failure_axis(failures, allow_batch=False)
     reg_names = alloc.policy_names()
     names = reg_names if policies is None else tuple(policies)
     pids = jnp.asarray([alloc.policy_id(p) for p in names])
 
     out = _run_grid(pids, arrivals, fleet, None, stacked_cap, config,
                        reg_names, names, keep_traces, stream, "capacity",
-                       shard, wspec=wspec, block_size=block_size)
+                       shard, wspec=wspec, fspec=fspec,
+                       block_size=block_size)
     if return_arrays:
         return out
     metrics, per_lat, per_tput, per_q = (np.asarray(x) for x in out[:4])

@@ -39,8 +39,10 @@ import numpy as np
 
 from repro.core import allocator as alloc
 from repro.core import capacity as cap_mod
+from repro.core import failures as fail_mod
 from repro.core.agents import Fleet, T4_PRICE_PER_HOUR
 from repro.core.capacity import CapacityConfig, billing_cost
+from repro.core.failures import FailureSpec
 from repro.core.routing import Workflow, check_workflow
 from repro.models.model import ModelApi
 
@@ -55,6 +57,7 @@ class Request:
     tokens_out: list = dataclasses.field(default_factory=list)
     finish_tick: int = -1
     parent_id: int = -1          # upstream request that spawned this one
+    retries: int = 0             # deadline retries consumed so far
 
 
 @dataclasses.dataclass
@@ -97,6 +100,7 @@ class FleetEngine:
         capacity: CapacityConfig | None = None,
         num_gpus: float = 1.0,
         price_per_hour: float = T4_PRICE_PER_HOUR,
+        failures: FailureSpec | None = None,
     ):
         assert set(fleet.names) == set(runtimes)
         alloc.get_policy(policy)  # fail fast on unregistered policies
@@ -106,6 +110,14 @@ class FleetEngine:
             cap_mod.check_capacity(capacity, g_total, num_gpus)
         else:
             cap_mod.check_budget_ceiling(g_total, num_gpus)
+        failures = fail_mod.resolve_failures(failures)
+        if failures is not None:
+            if failures.batched:
+                raise ValueError(
+                    "FleetEngine takes a single FailureSpec; stacked specs "
+                    "only flow through sweep(..., failures=[...])"
+                )
+            fail_mod.check_failures(failures)
         self.fleet = fleet
         self.runtimes = [runtimes[n] for n in fleet.names]
         self.policy = policy
@@ -116,6 +128,22 @@ class FleetEngine:
         self.capacity = capacity
         self.num_gpus = num_gpus
         self.price_per_hour = price_per_hour
+        self.failures = failures
+        # Failure-chain state + counters (same chains as the simulator:
+        # ``failure_uniforms`` is counter-based in the tick, so an engine
+        # run and a simulator run on the same spec see identical draws).
+        self._rev_on = 0.0
+        self._down = np.zeros(fleet.num_agents)
+        self.dropped = 0
+        self.retried = 0
+        self.slo_violations = 0
+        self._deadline = (
+            None if failures is None else
+            np.broadcast_to(
+                np.asarray(failures.deadline_s, np.float64),
+                (fleet.num_agents,),
+            ).copy()
+        )
         # Warm-pool state: the same eager ``capacity_step`` the simulator
         # scans over, so engine and simulator cannot drift.
         self._cap_state = cap_mod.init_capacity_state(g_total)
@@ -206,6 +234,71 @@ class FleetEngine:
         lam_j, q_j = jnp.asarray(lam, jnp.float32), jnp.asarray(queues, jnp.float32)
         g = alloc.dispatch(self.policy, t, lam_j, ema_j, q_j, self.fleet, g_total_t)
         return np.asarray(g)
+
+    # -- failure injection ---------------------------------------------------
+
+    def _failure_tick(self) -> tuple[float, np.ndarray]:
+        """Advance the revocation/outage chains for this tick.
+
+        Returns ``(phi, up)``: the fraction of warm capacity revoked and
+        the per-agent availability gate.  Also claws revoked instances
+        out of the warm-pool state so an elastic autoscaler must
+        re-provision them through its cold-start pipeline — the engine
+        analogue of the simulator's post-step ``warm *= (1 - phi)``.
+        """
+        if self.failures is None:
+            return 0.0, np.ones(self.fleet.num_agents)
+        u_rev, u_down = fail_mod.failure_uniforms(
+            self.failures, self.tick, self.fleet.num_agents
+        )
+        phi, up, rev_nxt, down_nxt = fail_mod.advance_failures(
+            self.failures, self.tick, self._rev_on, self._down, u_rev, u_down
+        )
+        self._rev_on = float(rev_nxt)
+        self._down = np.asarray(down_nxt, np.float64)
+        phi = float(phi)
+        if phi > 0.0 and self.capacity is not None:
+            st = self._cap_state
+            self._cap_state = cap_mod.CapacityState(
+                st.warm * (1.0 - phi), st.pipeline, st.idle_s
+            )
+        return phi, np.asarray(up, np.float64)
+
+    def _enforce_deadlines(self):
+        """Retry or drop queued requests whose sojourn exceeds the deadline.
+
+        A request waiting longer than its agent's ``deadline_s`` (ticks)
+        violates its SLO: while it has retry budget left it re-enters the
+        back of the queue with a fresh arrival stamp, afterwards it is
+        dropped.  In-service (admitted) requests are past queueing and are
+        never expired — matching the fluid model, where only backlog mass
+        is subject to the deadline.
+        """
+        if self.failures is None:
+            return
+        budget = int(np.clip(
+            float(np.asarray(self.failures.retry_budget)),
+            0, fail_mod.RETRY_CLASSES - 1,
+        ))
+        for i, rt in enumerate(self.runtimes):
+            deadline = self._deadline[i]
+            if deadline <= 0 or not rt.queue:
+                continue
+            survivors = deque()
+            while rt.queue:
+                req = rt.queue.popleft()
+                if self.tick - req.arrival_tick <= deadline:
+                    survivors.append(req)
+                    continue
+                self.slo_violations += 1
+                if req.retries < budget:
+                    req.retries += 1
+                    req.arrival_tick = self.tick
+                    survivors.append(req)
+                    self.retried += 1
+                else:
+                    self.dropped += 1
+            rt.queue = survivors
 
     # -- workflow routing ----------------------------------------------------
 
@@ -309,6 +402,7 @@ class FleetEngine:
     # -- main loop -----------------------------------------------------------
 
     def step(self):
+        self._enforce_deadlines()
         lam = self._arrivals_this_tick.copy()
         self._arrivals_this_tick[:] = 0.0
         queues = np.array(
@@ -323,10 +417,18 @@ class FleetEngine:
             )
         else:
             warm, pending = self.g_total, 0.0
-        g = self._allocate(lam, queues, ema_j, warm)
+        phi, up = self._failure_tick()
+        # Revoked capacity gates the tick's token budget exactly like the
+        # simulator's g_eff = g · up with cap_eff scaled by (1 - phi).
+        warm_eff = warm * (1.0 - phi)
+        g = self._allocate(lam, queues, ema_j, warm_eff)
         served = np.zeros(len(self.runtimes))
         done_before = len(self.completed)
         for i, rt in enumerate(self.runtimes):
+            if up[i] < 0.5:
+                # Agent outage: queue (and in-flight slots) preserved,
+                # nothing admitted or decoded this tick.
+                continue
             # g sums to at most the warm pool, so the fleet-wide spend is
             # capped at warm · budget_tokens: the warm pool gates the
             # token budget.
@@ -344,7 +446,8 @@ class FleetEngine:
         self.history.append(
             {"tick": self.tick, "allocation": g.tolist(), "arrivals": lam.tolist(),
              "queues": queues.tolist(), "decode_tokens": served.tolist(),
-             "routed": routed, "warm": warm, "pending": pending}
+             "routed": routed, "warm": warm, "pending": pending,
+             "revoked_frac": phi, "down": (up < 0.5).sum().item()}
         )
         self.tick += 1
 
@@ -373,6 +476,11 @@ class FleetEngine:
                 float(warm_ticks / len(self.history)) if self.history else 0.0
             ),
             "cost_usd": float(billing_cost(warm_ticks, self.price_per_hour)),
+            # Failure accounting (zeros when failures=None — the counters
+            # exist unconditionally so dashboards need no schema branch).
+            "dropped": self.dropped,
+            "retried": self.retried,
+            "slo_violations": self.slo_violations,
         }
         if self.workflow is not None:
             # End-to-end view: a request finishing at a sink closes the

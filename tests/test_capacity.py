@@ -245,6 +245,86 @@ class TestAutoscalerDynamics:
             assert (g.sum(axis=-1) <= warm * (1 + 1e-4) + 1e-6).all(), policy
 
 
+class TestRevocationInteractions:
+    """Capacity-layer edge cases under the failure injectors (PR 10)."""
+
+    def test_revocation_during_pending_cold_start(self):
+        """Instances revoked while replacements are still in the cold-start
+        pipeline: the pipeline must survive the revocation (pending mass is
+        not warm yet, so phi cannot touch it) and keep delivering — the
+        pool recovers instead of collapsing."""
+        from repro.core.failures import failure_spec
+
+        k = 4
+        cap = capacity_config("reactive", cold_start_s=float(k),
+                              min_instances=1.0)
+        spec = failure_spec("revoker", revoke_p_enter=0.3, revoke_p_exit=0.3,
+                            revoke_frac=0.8, seed=5)
+        tr = simulate("adaptive", workload.constant(RATES, 60), FLEET,
+                      ELASTIC, capacity=cap, failures=spec)
+        warm = np.asarray(tr.warm)
+        pending = np.asarray(tr.pending)
+        assert (warm >= -1e-6).all()
+        assert (warm <= ELASTIC.num_gpus + 1e-6).all()
+        assert (pending >= -1e-6).all()
+        # replacements were provisioned after the first revocation hit
+        first_hit = int(np.argmax(warm < warm[0]))
+        assert pending[first_hit:].max() > 0
+        # and the pool actually recovered above its post-revocation trough
+        assert warm[first_hit:].max() > warm[first_hit] + 0.5
+
+    def test_keep_alive_racing_revocation(self):
+        """scale_to_zero holds idle instances for keep_alive_s — while a
+        permanent 50% revocation strips half of them.  The race resolves
+        as: (1) the revoked half is never billed during the keep-alive
+        window, (2) the keep-alive clock stays demand-driven — revocation
+        slows the drain (serving scales by 1-phi) and can only *delay*
+        the release, never trigger it early — and (3) the pool still
+        reaches zero once the idle window expires."""
+        from repro.core.failures import failure_spec
+
+        # Light traffic so the backlog clears well inside the horizon
+        # even at half capacity.
+        cap = capacity_config("scale_to_zero", keep_alive_s=8.0)
+        arr = _onoff_arrivals(num_steps=60, on_until=10, scale=0.05)
+        base = simulate("static_equal", arr, FLEET, ELASTIC, capacity=cap)
+        spec = failure_spec("perma_revoke", revoke_p_enter=1.0,
+                            revoke_p_exit=0.0, revoke_frac=0.5, seed=0)
+        rev = simulate("static_equal", arr, FLEET, ELASTIC, capacity=cap,
+                       failures=spec)
+        warm_base = np.asarray(base.warm)
+        warm_rev = np.asarray(rev.warm)
+        assert warm_rev[-1] == 0.0                  # still releases
+        # billed warm never exceeds the surviving half while the pool is up
+        assert warm_rev.max() <= 0.5 * warm_base.max() + 1e-6
+        rel_base = int(np.argmax(warm_base == 0.0))
+        rel_rev = int(np.argmax(warm_rev == 0.0))
+        assert rel_rev >= rel_base, (rel_rev, rel_base)
+        # half the pool revoked for the whole window: cheaper despite the
+        # longer drain
+        s_base = summarize("static_equal", base, ELASTIC, FLEET.active)
+        s_rev = summarize("static_equal", rev, ELASTIC, FLEET.active)
+        assert s_rev.cost < s_base.cost
+
+    def test_billing_excludes_revoked_instance_seconds(self):
+        """A permanent 50% revocation halves the billed warm-instance-
+        seconds exactly: revoked capacity is never billed, on both the
+        fixed pool and the capacity-layer path."""
+        from repro.core.failures import failure_spec
+
+        arr = workload.constant(RATES, 60)
+        spec = failure_spec("half_gone", revoke_p_enter=1.0,
+                            revoke_p_exit=0.0, revoke_frac=0.5, seed=0)
+        for cap in (None, capacity_config("fixed")):
+            base = run_policy("static_equal", arr, FLEET, capacity=cap)
+            rev = run_policy("static_equal", arr, FLEET, capacity=cap,
+                             failures=spec)
+            assert rev.cost == pytest.approx(0.5 * base.cost, rel=1e-6), cap
+        # the warm trace itself records the billed (post-revocation) pool
+        tr = simulate("static_equal", arr, FLEET, failures=spec)
+        np.testing.assert_allclose(np.asarray(tr.warm), 0.5)
+
+
 class TestOracleParity:
     """The numpy oracle must track the JAX scan under elastic capacity."""
 

@@ -245,6 +245,33 @@ class TestConservation:
         assert float(np.asarray(two.queue[-1]).sum()) >= \
             float(np.asarray(one.queue[-1]).sum())
 
+    @pytest.mark.parametrize("policy", ("adaptive", "water_filling",
+                                        "throughput_greedy"))
+    def test_misrouted_mass_closes_the_balance(self, policy):
+        """Routing into padded slots leaks mass out of the conserving
+        balance — the ``misrouted`` trace field must account for every
+        unit of it: exogenous in == completed + misrouted + in-flight
+        (with the final-step forwarded mass masked to active slots, since
+        mass routed into padding is recorded as misrouted in the same
+        step it is forwarded)."""
+        padded_fleet = pad_fleet(FLEET, 8)
+        wf = pipeline_chain(8)  # route[3, 4] forwards into padding
+        arr_p = jnp.pad(ARR, ((0, 0), (0, 4)))
+        tr = simulate(policy, arr_p, padded_fleet, workflow=wf)
+        mis = np.asarray(tr.misrouted)
+        assert mis.sum() > 0, "stage 3 must leak into the padded slot"
+        # misrouted mass only ever appears on inactive slots
+        assert (mis[:, :4] == 0.0).all()
+        exo = float(np.asarray(tr.arrivals).sum())
+        comp = float(np.asarray(tr.completed).sum())
+        pending = (np.asarray(tr.served[-1]) * np.asarray(wf.fan_out)) \
+            @ np.asarray(wf.route)
+        in_flight = float(np.asarray(tr.queue[-1]).sum()
+                          + (pending * np.asarray(padded_fleet.active)).sum())
+        np.testing.assert_allclose(
+            exo, comp + mis.sum() + in_flight, rtol=1e-4
+        )
+
 
 class TestOracleParity:
     """JAX scan vs numpy oracle under routing, full policy registry."""

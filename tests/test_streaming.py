@@ -289,11 +289,12 @@ class TestTimeBlocking:
         cfg = SimConfig()
         for b in (1, 4):
             base = sweep_mod._stream_grid_jit(
-                None, fleet, None, None, stack, cfg, self.NAMES, None, 1, b
+                None, fleet, None, None, stack, None, cfg, self.NAMES, None,
+                1, b
             )
             grouped = sweep_mod._stream_grid_jit(
-                None, fleet, None, None, stack, cfg, self.NAMES, None, 1, b,
-                gen_groups=groups,
+                None, fleet, None, None, stack, None, cfg, self.NAMES, None,
+                1, b, gen_groups=groups,
             )
             for part, want in zip(grouped, base):
                 np.testing.assert_array_equal(
